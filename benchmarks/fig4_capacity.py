@@ -1,0 +1,27 @@
+"""Paper Fig 4: SLA attainment vs offered load (qps) — the capacity knee —
+for static vs dynamic batching at a 50 ms decode SLA."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.paper_models import deployment, llama3_70b
+from benchmarks.table2_sla import attainment
+
+QPS_GRID = (2, 4, 8, 12, 16, 24, 32, 48, 64, 96)
+
+
+def run(csv_out) -> None:
+    for policy in ("static", "combined"):
+        knee = 0.0
+        t0 = time.perf_counter()
+        for q in QPS_GRID:
+            res = attainment(llama3_70b, 8, 256.6, 61.5, 600, False,
+                             policy, q)
+            csv_out(f"fig4_{policy}_q{q}",
+                    (time.perf_counter() - t0) * 1e6 / len(QPS_GRID),
+                    f"attain={res.sla_attainment:.3f} "
+                    f"tbt_p95={res.tbt_ms_p95:.1f}ms")
+            if res.sla_attainment >= 0.9:
+                knee = q
+        csv_out(f"fig4_{policy}_capacity", (time.perf_counter() - t0) * 1e6,
+                f"capacity={knee}qps")

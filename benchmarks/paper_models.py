@@ -1,0 +1,56 @@
+"""The paper's own evaluation models (public dims) + per-row deployments.
+
+Table I/II rows use LLaMA-65B / LLaMA3-70B / PanGu-7B/38B/135B. PanGu dims
+are approximated from param counts (public cards don't publish all sizes);
+deployments (chips per model) follow standard practice for each size.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.config.base import ArchFamily, ModelConfig
+from repro.serving.cost_model import HardwareProfile
+
+
+def llama_65b() -> ModelConfig:
+    return ModelConfig(name="llama-65b", family=ArchFamily.DENSE,
+                       num_layers=80, d_model=8192, num_heads=64,
+                       num_kv_heads=64, d_ff=22016, vocab_size=32000,
+                       source="arXiv:2302.13971")
+
+
+def llama3_70b() -> ModelConfig:
+    return ModelConfig(name="llama3-70b", family=ArchFamily.DENSE,
+                       num_layers=80, d_model=8192, num_heads=64,
+                       num_kv_heads=8, d_ff=28672, vocab_size=128256,
+                       source="arXiv:2407.21783")
+
+
+def pangu_7b() -> ModelConfig:
+    return ModelConfig(name="pangu-7b", family=ArchFamily.DENSE,
+                       num_layers=32, d_model=4096, num_heads=32,
+                       num_kv_heads=32, d_ff=11008, vocab_size=100000,
+                       source="arXiv:2104.12369 (approx dims)")
+
+
+def pangu_38b() -> ModelConfig:
+    return ModelConfig(name="pangu-38b", family=ArchFamily.DENSE,
+                       num_layers=48, d_model=8192, num_heads=64,
+                       num_kv_heads=64, d_ff=22016, vocab_size=100000,
+                       source="arXiv:2104.12369 (approx dims)")
+
+
+def pangu_135b() -> ModelConfig:
+    return ModelConfig(name="pangu-135b", family=ArchFamily.DENSE,
+                       num_layers=107, d_model=10240, num_heads=80,
+                       num_kv_heads=80, d_ff=27648, vocab_size=100000,
+                       source="arXiv:2104.12369 (approx dims)")
+
+
+def deployment(chips: int, overhead_ms: float = 25.0) -> HardwareProfile:
+    """Ascend-910B-class card (paper authors are Huawei): ~376 TF fp16,
+    ~1.0 TB/s HBM, 64 GB."""
+    return HardwareProfile(name=f"910b-x{chips}", chips=chips,
+                           flops_per_chip=376e12, hbm_bw_per_chip=1.0e12,
+                           hbm_per_chip=64e9, step_overhead_ms=overhead_ms,
+                           parallel_eff=0.85)

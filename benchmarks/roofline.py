@@ -1,0 +1,105 @@
+"""Roofline terms per (arch x shape x mesh) from the dry-run artifacts.
+
+TPU v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+Conventions (validated against known decode/train FLOP counts, see
+EXPERIMENTS §Roofline): XLA cost_analysis 'flops' and 'bytes accessed' are
+per-partition (post-SPMD); collective operand sizes parsed from the HLO are
+per-device shard bytes. 'flops' counts MACs for dot ops -> x2 for FLOPs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+from repro.config.base import INPUT_SHAPES
+from repro.config.registry import get_config
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link (1 link conservative)
+
+DRYRUN_PATH = os.environ.get("REPRO_DRYRUN_JSONL", "results/dryrun.jsonl")
+
+
+def load(path: str = DRYRUN_PATH) -> List[Dict]:
+    if not os.path.exists(path):
+        return []
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            recs[(r["arch"], r["shape"], r["mesh"])] = r  # last wins
+    return list(recs.values())
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N_active*D train / 2*N_active*D prefill / 2*N_active*B decode
+    (global)."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch
+
+
+def analyse(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    flops_dev = 2.0 * rec.get("flops", 0.0)          # MACs -> FLOPs
+    bytes_dev = rec.get("bytes_accessed", 0.0)
+    coll = rec.get("collectives", {})
+    coll_dev = float(sum(v for k, v in coll.items() if k != "count"))
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / (flops_dev * chips) if flops_dev else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dom,
+        "model_flops": mf, "useful_frac": useful,
+        "collective_bytes_dev": coll_dev,
+    }
+
+
+def run(csv_out) -> None:
+    t0 = time.perf_counter()
+    rows = [a for a in (analyse(r) for r in load()) if a]
+    us = (time.perf_counter() - t0) * 1e6
+    if not rows:
+        csv_out("roofline", us, "no dryrun artifacts (run launch/dryrun.py)")
+        return
+    for a in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        csv_out(
+            f"roofline_{a['arch']}_{a['shape']}_{a['mesh']}", us / len(rows),
+            f"compute={a['t_compute_s']*1e3:.2f}ms "
+            f"memory={a['t_memory_s']*1e3:.2f}ms "
+            f"collective={a['t_collective_s']*1e3:.2f}ms "
+            f"dom={a['dominant']} useful={a['useful_frac']*100:.0f}%")
+
+
+def markdown_table(path: str = DRYRUN_PATH) -> str:
+    rows = [a for a in (analyse(r) for r in load(path)) if a]
+    out = ["| arch | shape | mesh | compute (ms) | memory (ms) | "
+           "collective (ms) | dominant | useful FLOP frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for a in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        out.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+            f"| {a['t_compute_s']*1e3:.2f} | {a['t_memory_s']*1e3:.2f} "
+            f"| {a['t_collective_s']*1e3:.2f} | {a['dominant']} "
+            f"| {a['useful_frac']*100:.0f}% |")
+    return "\n".join(out)

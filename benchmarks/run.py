@@ -1,0 +1,46 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def csv_out(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+BENCHES = ("fig3", "table1", "table2", "fig4", "ablation", "burst", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=BENCHES, default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    todo = [args.only] if args.only else list(BENCHES)
+    for name in todo:
+        try:
+            if name == "fig3":
+                from benchmarks.fig3_curves import run
+            elif name == "table1":
+                from benchmarks.table1_throughput import run
+            elif name == "table2":
+                from benchmarks.table2_sla import run
+            elif name == "fig4":
+                from benchmarks.fig4_capacity import run
+            elif name == "ablation":
+                from benchmarks.ablation_eps import run
+            elif name == "burst":
+                from benchmarks.burst_response import run
+            else:
+                from benchmarks.roofline import run
+            run(csv_out)
+        except Exception as e:  # keep the suite going; report the failure
+            csv_out(f"{name}_ERROR", 0.0, repr(e))
+            import traceback
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

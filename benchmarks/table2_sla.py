@@ -1,0 +1,73 @@
+"""Paper Table II: capacity (max qps meeting the SLA) + throughput under a
+50 ms TBT SLA, static vs SLA-constrained dynamic batching. Third row runs
+PD fusion (chunked prefill with controller-driven chunk budget)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.paper_models import deployment, llama3_70b, llama_65b
+from repro.config.base import ServeConfig
+from repro.serving.cost_model import CostModel
+from repro.serving.sim import LengthDist, ServingSimulator
+
+ROWS = [
+    # label, cfg, chips, mean_in, mean_out, n, chunked, paper_gain_pct
+    ("llama-65b", llama_65b, 8, 237.7, 416.2, 800, False, 2.7),
+    ("llama3-70b", llama3_70b, 8, 256.6, 61.5, 800, False, 22.4),
+    ("llama3-70b-pd", llama3_70b, 8, 256.6, 447.5, 800, True, 25.9),
+]
+
+SLA_MS = 50.0
+
+
+def attainment(cfg_fn, chips, mi, mo, n, chunked, policy, qps, seed=0):
+    cfg = cfg_fn()
+    cost = CostModel(cfg, deployment(chips, overhead_ms=15.0))
+    lengths = LengthDist(mean_in=mi, mean_out=mo, cv_in=0.3, cv_out=0.5)
+    serve = ServeConfig(policy=policy, b_max=256, d_sla_ms=SLA_MS,
+                        eps_d_ms=3.0, max_new_tokens=int(mo * 6) + 8,
+                        chunked_prefill=chunked, chunk_budget_tokens=256)
+    sim = ServingSimulator(cfg, serve, cost, lengths, seed=seed)
+    sim.add_requests(n, arrival_rate=qps)
+    res = sim.run()
+    return res
+
+
+TTFT_BOUND_S = 30.0   # queueing criterion: p90 time-to-first-token
+
+
+def capacity(cfg_fn, chips, mi, mo, n, chunked, policy,
+             grid=(0.5, 1, 2, 3, 4, 5, 6, 8, 10, 12, 16, 24, 32, 48, 64, 96)):
+    """Max qps meeting the SLOs (Sarathi-style capacity [21]): >= 90% of
+    decode steps within the TBT SLA AND p90 TTFT bounded (otherwise a
+    throttling scheduler could 'meet' the TBT SLA by queueing forever)."""
+    best_q, best_res = 0.0, None
+    fails = 0
+    for q in grid:
+        res = attainment(cfg_fn, chips, mi, mo, n, chunked, policy, q)
+        ok = (res.sla_attainment >= 0.90 and res.finished == n
+              and res.ttft_p90_s <= TTFT_BOUND_S)
+        if ok:
+            best_q, best_res = q, res
+            fails = 0
+        else:
+            fails += 1
+            if fails >= 2:
+                break
+    return best_q, best_res
+
+
+def run(csv_out) -> None:
+    for (label, cfg_fn, chips, mi, mo, n, chunked, paper) in ROWS:
+        t0 = time.perf_counter()
+        cap_s, res_s = capacity(cfg_fn, chips, mi, mo, n, chunked, "static")
+        cap_d, res_d = capacity(cfg_fn, chips, mi, mo, n, chunked, "combined")
+        us = (time.perf_counter() - t0) * 1e6
+        tp_s = res_s.throughput if res_s else 0.0
+        tp_d = res_d.throughput if res_d else 0.0
+        gain = (tp_d / max(tp_s, 1e-9) - 1) * 100
+        csv_out(
+            f"table2_{label}", us,
+            f"cap_static={cap_s}qps cap_dynamic={cap_d}qps "
+            f"tput_static={tp_s:.0f} tput_dynamic={tp_d:.0f} "
+            f"gain={gain:+.1f}% paper={paper:+.1f}%")

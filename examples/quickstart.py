@@ -1,0 +1,37 @@
+"""Quickstart: serve a reduced model with memory-aware dynamic batching.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ServeConfig
+from repro.config.registry import get_config
+from repro.models.model import build_model
+from repro.serving.engine import Engine
+
+
+def main():
+    cfg = get_config("granite-3-8b", "reduced")
+    model = build_model(cfg, dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+
+    serve = ServeConfig(policy="memory",   # paper Algorithm 1
+                        b_max=16, max_new_tokens=16, kv_pool_tokens=4096)
+    eng = Engine(model, params, serve, max_context=128,
+                 buckets=(1, 2, 4, 8, 16), prefill_chunk=16)
+
+    rng = np.random.RandomState(0)
+    handles = [eng.submit(list(map(int, rng.randint(0, cfg.vocab_size,
+                                                    size=rng.randint(4, 24)))))
+               for _ in range(10)]
+    eng.run()
+
+    for h in handles[:3]:
+        print(f"req {h.rid}: prompt[{h.prompt_len}] -> {h.output_tokens}")
+    print("summary:", {k: round(v, 2) for k, v in eng.summary().items()})
+
+
+if __name__ == "__main__":
+    main()

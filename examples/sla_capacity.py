@@ -1,0 +1,46 @@
+"""SLA-constrained serving (paper Algorithm 2 + Table II / Fig 4).
+
+Sweeps offered load and reports SLA attainment + capacity for static vs the
+combined (min(b_mem, b_SLA)) controller.
+
+    PYTHONPATH=src python examples/sla_capacity.py
+"""
+from repro.config.base import ServeConfig
+from repro.config.registry import get_config
+from repro.serving.cost_model import CostModel, PROFILES
+from repro.serving.sim import LengthDist, ServingSimulator
+
+SLA_MS = 50.0
+
+
+def run(policy: str, qps: float):
+    cfg = get_config("granite-3-8b")
+    cost = CostModel(cfg, PROFILES["paper-fig3"], c0_ms=28.0, c1_ms=0.225)
+    serve = ServeConfig(policy=policy, b_max=256, d_sla_ms=SLA_MS,
+                        eps_d_ms=3.0, max_new_tokens=256)
+    sim = ServingSimulator(cfg, serve, cost,
+                           LengthDist(mean_in=256, mean_out=64), seed=0)
+    sim.add_requests(400, arrival_rate=qps)
+    return sim.run()
+
+
+def main():
+    print(f"TBT SLA = {SLA_MS} ms; capacity = max qps with >=90% attainment "
+          f"and bounded TTFT")
+    for policy in ("static", "combined"):
+        cap = 0.0
+        print(f"-- {policy}")
+        for qps in (1, 2, 4, 6, 8, 12, 16):
+            res = run(policy, qps)
+            ok = res.sla_attainment >= 0.9 and res.ttft_p90_s <= 30.0
+            print(f"   qps={qps:4.1f} attain={res.sla_attainment:5.3f} "
+                  f"tbt_mean={res.tbt_ms_mean:6.1f}ms "
+                  f"ttft_p90={res.ttft_p90_s:6.1f}s "
+                  f"mean_batch={res.mean_batch:6.1f} {'OK' if ok else 'X'}")
+            if ok:
+                cap = qps
+        print(f"   capacity({policy}) = {cap} qps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Assigned-architecture configs. One module per arch; see config.registry."""

@@ -1,0 +1,40 @@
+"""seamless-m4t-medium — enc-dec multimodal backbone [arXiv:2308.11596].
+
+The mel/conv audio frontend is a stub per the assignment: input_specs() feeds
+precomputed frame embeddings of shape (batch, frames, d_model) to the encoder.
+"""
+from repro.config.base import ArchFamily, ModelConfig
+from repro.config.registry import register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-medium",
+        family=ArchFamily.ENCDEC,
+        num_layers=12,             # decoder layers
+        encoder_layers=12,
+        d_model=1024,
+        num_heads=16,
+        num_kv_heads=16,
+        d_ff=4096,
+        vocab_size=256206,
+        source="arXiv:2308.11596",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-medium-reduced",
+        family=ArchFamily.ENCDEC,
+        num_layers=2,
+        encoder_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=256,
+        vocab_size=512,
+        source="reduced",
+    )
+
+
+register("seamless-m4t-medium", full, reduced)

@@ -1,0 +1,6 @@
+# The paper's primary contribution: memory-aware + SLA-constrained dynamic
+# batching as a real-time control loop over the serving engine.
+from repro.core.batching import (BatchingMemory, BatchingSLA,  # noqa: F401
+                                 CombinedPolicy, StaticPolicy, make_policy)
+from repro.core.memory_model import MemoryModel  # noqa: F401
+from repro.core.telemetry import Telemetry  # noqa: F401

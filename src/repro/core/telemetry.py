@@ -1,0 +1,95 @@
+"""Rolling telemetry the controller consumes each scheduling interval.
+
+Tracks request arrival rate lambda(t), prompt/output length moments
+(EW-windowed), recent decode latency tau-bar (TBT) and recent decode batch
+size b-bar. Pure Python — shared by the real engine and the simulator.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Deque, Optional
+
+
+@dataclasses.dataclass
+class TelemetrySnapshot:
+    n_prefill_waiting: int = 0       # N^p: requests with prefill work pending
+    n_decode_running: int = 0        # N^d: requests currently decoding
+    mean_in: float = 0.0             # E[l_in]
+    var_in: float = 0.0
+    mean_out: float = 0.0            # E[l_out] (observed completions, EW)
+    var_out: float = 0.0
+    tbt_ms: float = 0.0              # tau-bar: recent mean decode latency
+    mean_batch: float = 0.0          # b-bar: recent mean decode batch size
+    arrival_rate: float = 0.0        # lambda(t) req/s
+    free_tokens: int = 0             # free KV-pool tokens (blocks*block_size)
+    now: float = 0.0
+
+
+class _Welford:
+    """Exponentially-weighted mean/variance."""
+
+    def __init__(self, halflife: float = 256.0):
+        self.alpha = 1.0 - math.exp(-math.log(2.0) / halflife)
+        self.mean: Optional[float] = None
+        self.var = 0.0
+
+    def update(self, x: float):
+        if self.mean is None:
+            self.mean = x
+            self.var = 0.0
+            return
+        d = x - self.mean
+        self.mean += self.alpha * d
+        self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+
+    def get(self, default_mean: float = 0.0, default_var: float = 0.0):
+        if self.mean is None:
+            return default_mean, default_var
+        return self.mean, self.var
+
+
+class Telemetry:
+    def __init__(self, window: int = 32, halflife: float = 256.0,
+                 prior_mean_in: float = 0.0, prior_mean_out: float = 0.0):
+        self.len_in = _Welford(halflife)
+        self.len_out = _Welford(halflife)
+        self.tbt: Deque[float] = collections.deque(maxlen=window)
+        self.batch: Deque[int] = collections.deque(maxlen=window)
+        self.arrivals: Deque[float] = collections.deque(maxlen=4 * window)
+        self.prior_mean_in = prior_mean_in
+        self.prior_mean_out = prior_mean_out
+
+    # -- event feeds --------------------------------------------------------
+    def on_arrival(self, t: float, prompt_len: int):
+        self.arrivals.append(t)
+        self.len_in.update(float(prompt_len))
+
+    def on_completion(self, output_len: int):
+        self.len_out.update(float(output_len))
+
+    def on_decode_step(self, tbt_ms: float, batch_size: int):
+        self.tbt.append(tbt_ms)
+        self.batch.append(batch_size)
+
+    # -- snapshot ------------------------------------------------------------
+    def arrival_rate(self, now: float, horizon: float = 10.0) -> float:
+        recent = [a for a in self.arrivals if a > now - horizon]
+        if not recent:
+            return 0.0
+        span = max(now - recent[0], 1e-6)
+        return len(recent) / span
+
+    def snapshot(self, *, now: float, n_prefill: int, n_decode: int,
+                 free_tokens: int) -> TelemetrySnapshot:
+        mi, vi = self.len_in.get(self.prior_mean_in, 0.0)
+        mo, vo = self.len_out.get(self.prior_mean_out, 0.0)
+        tbt = sum(self.tbt) / len(self.tbt) if self.tbt else 0.0
+        mb = sum(self.batch) / len(self.batch) if self.batch else 0.0
+        return TelemetrySnapshot(
+            n_prefill_waiting=n_prefill, n_decode_running=n_decode,
+            mean_in=mi, var_in=vi, mean_out=mo, var_out=vo,
+            tbt_ms=tbt, mean_batch=mb,
+            arrival_rate=self.arrival_rate(now), free_tokens=free_tokens,
+            now=now)

@@ -1,0 +1,2 @@
+from repro.distributed.sharding import (param_shardings,  # noqa: F401
+                                        batch_shardings, cache_shardings)

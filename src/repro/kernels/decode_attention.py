@@ -1,0 +1,98 @@
+"""Flash-decode GQA attention Pallas kernel (the serving hot spot).
+
+One new query token per sequence against a (possibly ring-buffer) KV cache.
+Grid = (batch, kv_head, kv_blocks); the kv-block axis is innermost and
+accumulates an online softmax in VMEM scratch. Masking is position-based
+(absolute positions per cache slot, -1 = empty), identical to the model's
+semantics — so ring buffers / sliding windows need no extra code.
+
+TPU notes: tiles are MXU-friendly when G (= q_heads/kv_heads) and head_dim
+are multiples of 8/128; the reduced test shapes run under interpret=True.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(qpos_ref, q_ref, k_ref, v_ref, kpos_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, window: int, block_s: int):
+    s = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)               # (BS, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)               # (BS, hd)
+    kpos = kpos_ref[0]                                   # (BS,)
+    qpos = qpos_ref[0, 0]                                # scalar
+
+    hd = q.shape[-1]
+    scores = jnp.dot(q, k.T) / math.sqrt(hd)             # (G, BS)
+    mask = (kpos >= 0) & (kpos <= qpos)
+    if window:
+        mask = mask & (kpos > qpos - window)
+    scores = jnp.where(mask[None, :], scores, NEG_INF)
+
+    m_prev = m_ref[...]                                  # (G, 1)
+    m_cur = jnp.max(scores, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)                          # (G, BS)
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(p, v)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(s == ns - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k, v, q_pos, k_pos, *, window: int = 0,
+                            block_s: int = 128, interpret: bool = True):
+    """q: (B, H, hd); k/v: (B, S, KV, hd); q_pos: (B,); k_pos: (B, S).
+
+    Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bs = min(block_s, S)
+    ns = -(-S // bs)
+    qr = q.reshape(B, KV, G, hd)
+    qpos2 = q_pos.reshape(B, 1).astype(jnp.int32)
+
+    grid = (B, KV, ns)
+    out = pl.pallas_call(
+        functools.partial(_kernel, window=window, block_s=bs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, s: (b, 0)),            # qpos
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),  # q
+            pl.BlockSpec((1, bs, 1, hd), lambda b, h, s: (b, s, h, 0)),  # k
+            pl.BlockSpec((1, bs, 1, hd), lambda b, h, s: (b, s, h, 0)),  # v
+            pl.BlockSpec((1, bs), lambda b, h, s: (b, s)),           # kpos
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),   # running max m
+            pltpu.VMEM((G, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((G, hd), jnp.float32),  # weighted-value accumulator
+        ],
+        interpret=interpret,
+    )(qpos2, qr, k, v, k_pos.astype(jnp.int32))
+    return out.reshape(B, H, hd)

@@ -1,0 +1,103 @@
+"""Causal flash-attention Pallas kernel (prefill / training hot spot).
+
+Grid = (batch, q_head, q_blocks, kv_blocks); kv innermost with online
+softmax in VMEM scratch. Position-based masking (supports chunked prefill
+against a pre-filled cache and sliding windows). GQA via index-map head
+folding: q head h reads kv head h // G.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, window: int, causal: bool):
+    t = pl.program_id(3)
+    nt = pl.num_programs(3)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (BQ, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (BK, hd)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (BK, hd)
+    qpos = qpos_ref[0]                                   # (BQ,)
+    kpos = kpos_ref[0]                                   # (BK,)
+
+    hd = q.shape[-1]
+    scores = jnp.dot(q, k.T) / math.sqrt(hd)             # (BQ, BK)
+    mask = kpos[None, :] >= 0
+    if causal:
+        mask = mask & (kpos[None, :] <= qpos[:, None])
+    if window:
+        mask = mask & (kpos[None, :] > qpos[:, None] - window)
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(t == nt - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, q_pos, k_pos, *, window: int = 0,
+                           causal: bool = True, block_q: int = 128,
+                           block_k: int = 128, interpret: bool = True):
+    """q: (B, Tq, H, hd); k/v: (B, Tk, KV, hd); q_pos: (B, Tq); k_pos: (B, Tk).
+
+    Returns (B, Tq, H, hd)."""
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(block_q, Tq)
+    bk = min(block_k, Tk)
+    nq, nk = -(-Tq // bq), -(-Tk // bk)
+    assert Tq % bq == 0 and Tk % bk == 0, "pad seq to block multiple"
+
+    # head-major layouts so blocks are (tokens, hd) tiles
+    qh = q.transpose(0, 2, 1, 3)                         # (B, H, Tq, hd)
+    kh = k.transpose(0, 2, 1, 3)                         # (B, KV, Tk, hd)
+    vh = v.transpose(0, 2, 1, 3)
+
+    grid = (B, H, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, window=window, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, tq, tk: (b, h, tq, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, tq, tk: (b, h // G, tk, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, tq, tk: (b, h // G, tk, 0)),
+            pl.BlockSpec((1, bq), lambda b, h, tq, tk: (b, tq)),
+            pl.BlockSpec((1, bk), lambda b, h, tq, tk: (b, tk)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, tq, tk: (b, h, tq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Tq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh, q_pos.astype(jnp.int32), k_pos.astype(jnp.int32))
+    return out.transpose(0, 2, 1, 3)

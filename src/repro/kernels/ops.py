@@ -1,0 +1,69 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run under interpret=True; on TPU they lower
+natively. `use_kernel=False` routes to the pure-jnp oracle — the serving and
+training stacks call these entry points so the backend is a config switch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_kernel
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.rglru_scan import rglru_scan_kernel
+from repro.kernels.rmsnorm import rmsnorm_kernel
+from repro.kernels.ssd_scan import ssd_intra_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "use_kernel", "block_s"))
+def decode_attention(q, k, v, q_pos, k_pos, *, window: int = 0,
+                     use_kernel: bool = True, block_s: int = 128):
+    if not use_kernel:
+        return ref.decode_attention_ref(q, k, v, q_pos, k_pos, window=window)
+    return decode_attention_kernel(q, k, v, q_pos, k_pos, window=window,
+                                   block_s=block_s, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("window", "causal", "use_kernel",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, q_pos, k_pos, *, window: int = 0,
+                    causal: bool = True, use_kernel: bool = True,
+                    block_q: int = 128, block_k: int = 128):
+    if not use_kernel:
+        return ref.flash_attention_ref(q, k, v, q_pos, k_pos, window=window,
+                                       causal=causal)
+    return flash_attention_kernel(q, k, v, q_pos, k_pos, window=window,
+                                  causal=causal, block_q=block_q,
+                                  block_k=block_k, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def ssd_intra(xdt, cum_a, Br, Cr, *, use_kernel: bool = True):
+    if not use_kernel:
+        return ref.ssd_intra_ref(xdt, cum_a, Br, Cr)
+    return ssd_intra_kernel(xdt, cum_a, Br, Cr, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "block_w"))
+def rglru_scan(a, bx, h0, *, use_kernel: bool = True, block_w: int = 128):
+    if not use_kernel:
+        return ref.rglru_scan_ref(a, bx, h0)
+    return rglru_scan_kernel(a, bx, h0, block_w=block_w,
+                             interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "use_kernel",
+                                             "block_rows"))
+def rmsnorm(x, w, *, eps: float = 1e-6, use_kernel: bool = True,
+            block_rows: int = 128):
+    if not use_kernel:
+        return ref.rmsnorm_ref(x, w, eps=eps)
+    return rmsnorm_kernel(x, w, eps=eps, block_rows=block_rows,
+                          interpret=not _on_tpu())

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, q_pos, k_pos, *, window: int = 0):
+    """q: (B, H, hd); k/v: (B, S, KV, hd); q_pos: (B,); k_pos: (B, S)."""
+    B, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qh = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qh, k.astype(jnp.float32))
+    scores = scores / math.sqrt(hd)
+    mask = (k_pos >= 0) & (k_pos <= q_pos[:, None])
+    if window:
+        mask = mask & (k_pos > q_pos[:, None] - window)
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def flash_attention_ref(q, k, v, q_pos, k_pos, *, window: int = 0,
+                        causal: bool = True):
+    """q: (B, Tq, H, hd); k/v: (B, Tk, KV, hd); q_pos: (B,Tq); k_pos: (B,Tk)."""
+    B, Tq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qh = q.reshape(B, Tq, KV, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qh, k.astype(jnp.float32))
+    scores = scores / math.sqrt(hd)
+    mask = (k_pos[:, None, :] >= 0)
+    if causal:
+        mask = mask & (k_pos[:, None, :] <= q_pos[:, :, None])
+    if window:
+        mask = mask & (k_pos[:, None, :] > q_pos[:, :, None] - window)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Tq, H * hd).reshape(B, Tq, H, hd).astype(q.dtype)
+
+
+def ssd_intra_ref(xdt, cum_a, Br, Cr):
+    """Intra-chunk SSD term + per-chunk states (the Pallas kernel's scope).
+
+    xdt:   (B, nc, Q, H, P)  dt-scaled inputs
+    cum_a: (B, nc, Q, H)     within-chunk cumulative log-decay
+    Br/Cr: (B, nc, Q, N)
+    Returns y_intra (B, nc, Q, H, P), s_chunk (B, nc, H, P, N).
+    """
+    f32 = jnp.float32
+    xdt, cum_a = xdt.astype(f32), cum_a.astype(f32)
+    Br, Cr = Br.astype(f32), Cr.astype(f32)
+    Q = xdt.shape[2]
+    li = cum_a[:, :, :, None, :]
+    lj = cum_a[:, :, None, :, :]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(li - lj), 0.0)
+    cb = jnp.einsum("bzin,bzjn->bzij", Cr, Br)
+    w = cb[..., None] * L
+    y_intra = jnp.einsum("bzijh,bzjhp->bzihp", w, xdt)
+    seg_end = cum_a[:, :, -1:, :]
+    decay_to_end = jnp.exp(seg_end - cum_a)
+    s_chunk = jnp.einsum("bzjn,bzjhp->bzhpn", Br, xdt * decay_to_end[..., None])
+    return y_intra, s_chunk
+
+
+def rmsnorm_ref(x, w, *, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(ms + eps) * (1.0 + w.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def rglru_scan_ref(a, bx, h0):
+    """h_t = a_t * h_{t-1} + bx_t. a/bx: (B, T, W) fp32; h0: (B, W).
+
+    Returns (h_all (B,T,W), h_T (B,W))."""
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, ar * bl + br
+
+    bx = bx.at[:, 0].add(a[:, 0] * h0)
+    _, h_all = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h_all, h_all[:, -1]

@@ -1,0 +1,57 @@
+"""RG-LRU linear-recurrence Pallas kernel (RecurrentGemma hot loop).
+
+h_t = a_t * h_{t-1} + bx_t over the time axis, blocked over the width axis:
+grid = (batch, width_blocks); each program runs the sequential recurrence in
+VMEM with a fori_loop. On TPU the (T, WB) tile streams HBM->VMEM once —
+this is the memory-optimal layout for a bandwidth-bound elementwise scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, bx_ref, h0_ref, y_ref, hT_ref):
+    a = a_ref[0].astype(jnp.float32)        # (T, WB)
+    bx = bx_ref[0].astype(jnp.float32)      # (T, WB)
+    h0 = h0_ref[0].astype(jnp.float32)      # (WB,)
+    T = a.shape[0]
+
+    def body(t, carry):
+        h = carry
+        h = a[t] * h + bx[t]
+        y_ref[0, t] = h.astype(y_ref.dtype)
+        return h
+
+    hT = jax.lax.fori_loop(0, T, body, h0)
+    hT_ref[0] = hT.astype(hT_ref.dtype)
+
+
+def rglru_scan_kernel(a, bx, h0, *, block_w: int = 128,
+                      interpret: bool = True):
+    """a, bx: (B, T, W); h0: (B, W). Returns (h_all (B,T,W), h_T (B,W))."""
+    B, T, W = a.shape
+    bw = min(block_w, W)
+    assert W % bw == 0, "pad width to block multiple"
+    nw = W // bw
+    grid = (B, nw)
+    y, hT = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, T, bw), lambda b, w: (b, 0, w)),
+            pl.BlockSpec((1, T, bw), lambda b, w: (b, 0, w)),
+            pl.BlockSpec((1, bw), lambda b, w: (b, w)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, T, bw), lambda b, w: (b, 0, w)),
+            pl.BlockSpec((1, bw), lambda b, w: (b, w)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, W), jnp.float32),
+            jax.ShapeDtypeStruct((B, W), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, bx, h0)
+    return y, hT

@@ -1,0 +1,64 @@
+"""Mamba2 SSD intra-chunk Pallas kernel.
+
+Computes, per (batch, chunk, head): the quadratic intra-chunk output
+Y = (C B^T o L) . xdt and the chunk state contribution
+S = (B * decay_to_end)^T xdt. The cheap inter-chunk recurrence stays in JAX
+(lax.scan over nc) — the kernel covers the O(T * Q * (N + P)) hot loop.
+
+Tiles: Q x N and Q x P matrices in VMEM; Q (chunk len, default 256), N
+(state 128) and P (head dim 64) are MXU-aligned at full scale.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xdt_ref, cum_a_ref, br_ref, cr_ref, y_ref, s_ref):
+    xdt = xdt_ref[0, 0, :, 0].astype(jnp.float32)        # (Q, P)
+    ca = cum_a_ref[0, 0, :, 0].astype(jnp.float32)       # (Q,)
+    br = br_ref[0, 0].astype(jnp.float32)                # (Q, N)
+    cr = cr_ref[0, 0].astype(jnp.float32)                # (Q, N)
+    Q = xdt.shape[0]
+
+    li = ca[:, None]
+    lj = ca[None, :]
+    tri = jnp.tril(jnp.ones((Q, Q), jnp.bool_))
+    L = jnp.where(tri, jnp.exp(li - lj), 0.0)            # (Q, Q)
+    cb = jnp.dot(cr, br.T)                               # (Q, Q)
+    y = jnp.dot(cb * L, xdt)                             # (Q, P)
+    decay_end = jnp.exp(ca[-1] - ca)                     # (Q,)
+    s = jnp.dot((br * decay_end[:, None]).T, xdt)        # (N, P)
+
+    y_ref[0, 0, :, 0] = y.astype(y_ref.dtype)
+    s_ref[0, 0, 0] = s.T.astype(s_ref.dtype)             # (P, N)
+
+
+def ssd_intra_kernel(xdt, cum_a, Br, Cr, *, interpret: bool = True):
+    """xdt: (B, nc, Q, H, P); cum_a: (B, nc, Q, H); Br/Cr: (B, nc, Q, N).
+
+    Returns y_intra (B, nc, Q, H, P) fp32, s_chunk (B, nc, H, P, N) fp32."""
+    B, nc, Q, H, P = xdt.shape
+    N = Br.shape[-1]
+    grid = (B, nc, H)
+    y, s = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, 1, P, N), lambda b, c, h: (b, c, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, Q, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xdt, cum_a, Br, Cr)
+    return y, s

@@ -1,0 +1,285 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("REPRO_DRYRUN_XLA_FLAGS",
+                                         "--xla_force_host_platform_device_count=512")
+# ^ MUST be the very first two lines — before ANY other import (jax locks
+# the device count on first init). The dry-run, and ONLY the dry-run, needs
+# 512 placeholder host devices; smoke tests and benches see 1 device.
+#
+# Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.config.base import INPUT_SHAPES, ArchFamily, InputShape, \
+    ModelConfig, TrainConfig  # noqa: E402
+from repro.config.registry import get_config, list_archs  # noqa: E402
+from repro.distributed.sharding import (batch_shardings, cache_shardings,  # noqa: E402
+                                        decode_input_shardings,
+                                        param_shardings, replicated)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.model import Model, default_enc_len, input_specs  # noqa: E402
+from repro.training.optimizer import adamw_init  # noqa: E402
+from repro.training.train_loop import make_train_step  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# long_500k applicability (DESIGN §4): sub-quadratic state only
+
+LONG_OK = {
+    "mamba2-2.7b": "constant SSM state",
+    "recurrentgemma-9b": "RG-LRU + 2048-window ring cache",
+    "mistral-nemo-12b": "sliding-window variant (window 4096)",
+}
+
+# decode shapes exercised for every arch (all have decoders; seamless-m4t's
+# decode runs its decoder with a fixed cross-KV — encoder itself has no
+# decode step)
+
+
+def resolve_config(arch: str, shape: InputShape) -> Optional[ModelConfig]:
+    if shape.name == "long_500k":
+        if arch not in LONG_OK:
+            return None
+        if arch == "mistral-nemo-12b":
+            from repro.configs.mistral_nemo_12b import sliding
+            return sliding(4096)
+    cfg = get_config(arch)
+    if cfg.moe is not None and shape.kind != "train":
+        # production serving: capacity-factor dispatch, not the exact
+        # worst-case no-drop used by the bitwise CPU engine (§Perf iter G)
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, inference_no_drop=False, capacity_factor=2.0))
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# collective-bytes parser (post-SPMD optimized HLO)
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16}
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    out = {op: 0 for op in _COLL_OPS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        for op in _COLL_OPS:
+            idx = line.find(f" {op}(")
+            if idx < 0:  # async form: count the -start, skip the -done
+                idx = line.find(f" {op}-start(")
+            if idx < 0:
+                continue
+            lhs = line[:idx]
+            if "=" not in lhs:
+                continue
+            nbytes = 0
+            for dt, dims in _SHAPE_RE.findall(lhs.split("=", 1)[1]):
+                if dt not in _DTYPE_BYTES:
+                    continue
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                nbytes += n * _DTYPE_BYTES[dt]
+            out[op] += nbytes
+            out["count"] += 1
+            break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# lowering
+
+
+def build_lowerable(arch: str, shape: InputShape, mesh):
+    """Returns (fn, args, in_shardings, out_shardings, meta)."""
+    cfg = resolve_config(arch, shape)
+    if cfg is None:
+        return None
+    model = Model(cfg, dtype=jnp.bfloat16)
+    specs = input_specs(cfg, shape)
+    pshapes = model.init_shapes()
+    pshard = param_shardings(pshapes, cfg, mesh)
+    meta = {"params": cfg.param_count(), "active_params": cfg.active_param_count()}
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(global_batch=shape.global_batch,
+                           seq_len=shape.seq_len, remat=True)
+        oshapes = jax.eval_shape(adamw_init, pshapes)
+        oshard = param_shardings_opt(oshapes, pshard, mesh)
+        bshard = batch_shardings(specs, cfg, mesh)
+        fn = make_train_step(model, tcfg)
+        args = (pshapes, oshapes, specs)
+        in_sh = (pshard, oshard, bshard)
+        out_sh = (pshard, oshard, None)
+        return fn, args, in_sh, out_sh, meta
+
+    # Cache sharding: GSPMD auto-inference (cache_mode="auto") finds
+    # partial-axis layouts (e.g. kv-heads x half-model + replication) that
+    # PartitionSpec cannot express; the explicit rules forced involuntary
+    # remats and 16x more all-gather volume on GQA decode. Explicit specs
+    # are kept for ablation (EXPERIMENTS §Perf).
+    seq_shard = shape.global_batch == 1
+    if os.environ.get("REPRO_CACHE_SHARDING", "auto") == "explicit":
+        cache_sh = cache_shardings(specs["cache"], cfg, mesh,
+                                   seq_shard=seq_shard)
+    else:
+        cache_sh = None
+
+    if shape.kind == "prefill":
+        tp = batch_shardings({"tokens": specs["tokens"],
+                              "positions": specs["positions"]}, cfg, mesh)
+        extras = specs.get("extras")
+        ex_sh = batch_shardings(extras, cfg, mesh) if extras else None
+
+        def prefill_fn(params, tokens, positions, cache, extras):
+            # production serving: only the final position's logits are
+            # needed to start decode (§Perf iteration A)
+            return model.prefill(params, tokens, positions, cache, extras,
+                                 last_only=True)
+
+        args = (pshapes, specs["tokens"], specs["positions"], specs["cache"],
+                extras)
+        in_sh = (pshard, tp["tokens"], tp["positions"], cache_sh, ex_sh)
+        return prefill_fn, args, in_sh, None, meta
+
+    # decode: ONE token against a seq_len-deep cache. The cache is DONATED
+    # (in-place update) as in any production serving loop (§Perf iter D).
+    tok_sh = decode_input_shardings(cfg, mesh, shape.global_batch)
+
+    def serve_step(params, tokens, seq_lens, cache):
+        logits, cache = model.decode_step(params, tokens, seq_lens, cache)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    args = (pshapes, specs["tokens"], specs["seq_lens"], specs["cache"])
+    in_sh = (pshard, tok_sh, tok_sh, cache_sh)
+    meta["donate"] = (3,)
+    return serve_step, args, in_sh, None, meta
+
+
+def param_shardings_opt(oshapes, pshard, mesh):
+    """Optimizer state shards like its parameter; scalars replicated."""
+    return {
+        "m": pshard, "v": pshard,
+        "step": replicated(mesh),
+    }
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool) -> Dict[str, Any]:
+    shape = INPUT_SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "status": "ok"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    built = build_lowerable(arch, shape, mesh)
+    if built is None:
+        rec["status"] = "skipped"
+        rec["reason"] = "long_500k requires sub-quadratic attention (DESIGN §4)"
+        return rec
+    fn, args, in_sh, out_sh, meta = built
+    donate = meta.pop("donate", ())
+    rec.update(meta)
+    try:
+        t0 = time.perf_counter()
+        # jax.set_mesh (not the legacy `with mesh:`) so model-level
+        # with_sharding_constraint hints see the abstract mesh
+        with jax.set_mesh(mesh):
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            rec["lower_s"] = round(time.perf_counter() - t0, 2)
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.perf_counter() - t1, 2)
+        try:
+            ma = compiled.memory_analysis()
+            if ma is not None:
+                for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes"):
+                    v = getattr(ma, f, None)
+                    if v is not None:
+                        rec[f] = int(v)
+        except Exception as e:  # CPU backend may not implement it
+            rec["memory_analysis_error"] = str(e)
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            if ca:
+                rec["flops"] = float(ca.get("flops", -1))
+                rec["bytes_accessed"] = float(ca.get("bytes accessed", -1))
+        except Exception as e:
+            rec["cost_analysis_error"] = str(e)
+        try:
+            rec["collectives"] = collective_bytes(compiled.as_text())
+        except Exception as e:
+            rec["collectives_error"] = str(e)
+    except Exception:
+        rec["status"] = "error"
+        rec["error"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("status") in ("ok", "skipped"):
+                        done.add((r["arch"], r["shape"], r["mesh"]))
+                except json.JSONDecodeError:
+                    pass
+
+    with open(args.out, "a") as f:
+        for arch in archs:
+            for shape in shapes:
+                for mp in meshes:
+                    meshn = "2x16x16" if mp else "16x16"
+                    if (arch, shape, meshn) in done:
+                        print(f"skip (cached): {arch} {shape} {meshn}")
+                        continue
+                    print(f"=== {arch} x {shape} x {meshn}", flush=True)
+                    rec = run_one(arch, shape, mp)
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+                    msg = rec["status"]
+                    if rec["status"] == "ok":
+                        msg += (f" lower={rec.get('lower_s')}s"
+                                f" compile={rec.get('compile_s')}s"
+                                f" flops={rec.get('flops', 0):.3g}"
+                                f" coll={rec.get('collectives', {})}")
+                    elif rec["status"] == "error":
+                        msg += "\n" + rec["error"][-500:]
+                    print(msg, flush=True)
+
+
+if __name__ == "__main__":
+    main()

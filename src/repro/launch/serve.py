@@ -1,0 +1,63 @@
+"""Serving CLI: run the continuous-batching engine on any --arch (reduced
+variants on CPU; the same engine is the production template for TPU).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
+        --policy combined --sla-ms 200 --requests 20
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ServeConfig
+from repro.config.registry import get_config, list_archs
+from repro.models.model import build_model, default_enc_len
+from repro.serving.engine import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b", choices=list_archs())
+    ap.add_argument("--variant", default="reduced", choices=["reduced", "full"])
+    ap.add_argument("--policy", default="memory",
+                    choices=["static", "memory", "sla", "combined"])
+    ap.add_argument("--sla-ms", type=float, default=0.0)
+    ap.add_argument("--b-max", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--pool-tokens", type=int, default=4096)
+    ap.add_argument("--max-context", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, args.variant)
+    model = build_model(cfg, dtype=jnp.float32 if args.variant == "reduced"
+                        else jnp.bfloat16)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    serve = ServeConfig(policy=args.policy, b_max=args.b_max,
+                        d_sla_ms=args.sla_ms, max_new_tokens=args.max_new,
+                        kv_pool_tokens=args.pool_tokens)
+    enc_len = 16 if default_enc_len(cfg) else 0
+    eng = Engine(model, params, serve, max_context=args.max_context,
+                 buckets=tuple(2 ** i for i in range(0, args.b_max.bit_length())),
+                 prefill_chunk=16, enc_len=enc_len)
+
+    rng = np.random.RandomState(args.seed)
+    for _ in range(args.requests):
+        extras = None
+        if enc_len:
+            key = "enc_frames" if cfg.family.value == "encdec" else "images"
+            extras = {key: jnp.asarray(rng.randn(1, enc_len, cfg.d_model),
+                                       jnp.float32)}
+        eng.submit(list(map(int, rng.randint(0, cfg.vocab_size,
+                                             size=rng.randint(4, 24)))),
+                   extras=extras)
+    eng.run()
+    print({k: round(v, 2) for k, v in eng.summary().items()})
+
+
+if __name__ == "__main__":
+    main()

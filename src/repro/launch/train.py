@@ -1,0 +1,41 @@
+"""Training CLI: any --arch (reduced on CPU; full configs are exercised via
+the dry-run / a real TPU mesh).
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-2.7b --steps 30
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+
+from repro.config.base import TrainConfig
+from repro.config.registry import get_config, list_archs
+from repro.models.model import build_model
+from repro.training.train_loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b", choices=list_archs())
+    ap.add_argument("--variant", default="reduced", choices=["reduced", "full"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, args.variant)
+    model = build_model(cfg, dtype=jnp.float32 if args.variant == "reduced"
+                        else jnp.bfloat16)
+    t = TrainConfig(global_batch=args.batch, seq_len=args.seq,
+                    steps=args.steps, lr=args.lr,
+                    warmup_steps=max(args.steps // 10, 1), log_every=10)
+    res = train(model, t, checkpoint_path=args.ckpt or None)
+    print(f"final loss {res['losses'][-1]:.4f} "
+          f"({res['tokens_per_s']:.0f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

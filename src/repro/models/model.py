@@ -1,0 +1,173 @@
+"""Public model facade: init / train loss / prefill / decode, per config."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ArchFamily, InputShape, ModelConfig
+from repro.models import backbone as B
+
+# stub-frontend lengths (assignment carve-out: modality encoders are stubs)
+AUDIO_FRAMES = 1024     # seamless-m4t: precomputed conv/mel frame embeddings
+IMAGE_PATCHES = 1601    # llama-3.2-vision: 1 tile of 1600 patches + CLS
+
+
+class Model:
+    """Thin, stateless facade bound to a ModelConfig."""
+
+    def __init__(self, cfg: ModelConfig, dtype=None):
+        self.cfg = cfg
+        self.dtype = dtype
+
+    # -- params -----------------------------------------------------------
+    def init(self, key) -> Dict[str, Any]:
+        return B.init_params(key, self.cfg, self.dtype)
+
+    def init_shapes(self) -> Dict[str, Any]:
+        return jax.eval_shape(lambda k: B.init_params(k, self.cfg, self.dtype),
+                              jax.random.PRNGKey(0))
+
+    # -- training ---------------------------------------------------------
+    def forward_train(self, params, batch, remat: bool = True,
+                      no_drop: bool = False):
+        return B.forward_train(params, batch, self.cfg, remat=remat,
+                               no_drop=no_drop)
+
+    def loss_fn(self, params, batch, remat: bool = True,
+                loss_chunk: int = 512
+                ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        """Next-token CE, computed over T-chunks so the full (B, T, V) fp32
+        logits tensor is never materialized (§Perf iteration B — at 256k
+        vocab x 4k seq that tensor is TBs/device)."""
+        hidden, aux = B.forward_train(params, batch, self.cfg, remat=remat,
+                                      return_hidden=True)
+        tokens = batch["tokens"]
+        h = hidden[:, :-1]
+        targets = tokens[:, 1:]
+        mask = batch.get("loss_mask")
+        w = mask[:, 1:].astype(jnp.float32) if mask is not None \
+            else jnp.ones(targets.shape, jnp.float32)
+
+        Bs, Tm, d = h.shape
+        C = min(loss_chunk, Tm)
+        pad = (-Tm) % C
+        if pad:
+            h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+            targets = jnp.pad(targets, ((0, 0), (0, pad)))
+            w = jnp.pad(w, ((0, 0), (0, pad)))
+        nc = (Tm + pad) // C
+        hc = h.reshape(Bs, nc, C, d).swapaxes(0, 1)        # (nc, B, C, d)
+        tc = targets.reshape(Bs, nc, C).swapaxes(0, 1)
+        wc = w.reshape(Bs, nc, C).swapaxes(0, 1)
+
+        def chunk_ce(args):
+            # CE via logsumexp + one-hot contraction: both reduce OVER the
+            # (model-sharded) vocab axis, so the (B, C, V) logits stay
+            # sharded. take_along_axis (a gather over the sharded axis)
+            # made GSPMD replicate the whole chunk (§Perf iteration F).
+            hh, tt, ww = args
+            lg = B.logits_head(params, hh, self.cfg)       # (B, C, V) fp32
+            # pin (batch x fsdp, :, vocab x model) — scan-transpose loses
+            # the batch sharding on the cotangent otherwise (§Perf iter F)
+            from repro.distributed.sharding import maybe_constrain
+            lg = maybe_constrain(lg, ("pod", "data"), None, "model")
+            lse = jax.scipy.special.logsumexp(lg, axis=-1)
+            onehot = jax.nn.one_hot(tt, lg.shape[-1], dtype=lg.dtype)
+            tgt = jnp.einsum("bcv,bcv->bc", lg, onehot)
+            nll = lse - tgt
+            return (nll * ww).sum()
+
+        total = jax.lax.map(chunk_ce, (hc, tc, wc)).sum()
+        ce = total / jnp.clip(w.sum(), 1.0)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    # -- serving ----------------------------------------------------------
+    def init_cache(self, batch: int, max_context: int, enc_len: int = 0,
+                   prefill_chunk: int = 1):
+        if enc_len == 0:
+            enc_len = default_enc_len(self.cfg)
+        return B.init_cache(self.cfg, batch, max_context, self.dtype,
+                            enc_len=enc_len, chunk=prefill_chunk)
+
+    def prefill(self, params, tokens, positions, cache,
+                extras: Optional[Dict[str, jnp.ndarray]] = None,
+                last_only: bool = False):
+        """Chunked prefill: tokens/positions (B, T), -1 positions = padding.
+
+        last_only=True returns logits for the final position only (B, 1, V)
+        — the production serving path."""
+        return B.forward_cached(params, tokens, positions, cache, self.cfg,
+                                decode=False, extras=extras,
+                                last_only=last_only)
+
+    def decode_step(self, params, tokens, seq_lens, cache):
+        """tokens: (B,) next input token ids; seq_lens: (B,) their absolute
+        positions. Returns (logits (B, V), cache)."""
+        logits, cache = B.forward_cached(
+            params, tokens[:, None], seq_lens[:, None], cache, self.cfg,
+            decode=True)
+        return logits[:, 0], cache
+
+
+def build_model(cfg: ModelConfig, dtype=None) -> Model:
+    return Model(cfg, dtype)
+
+
+def default_enc_len(cfg: ModelConfig) -> int:
+    if cfg.family == ArchFamily.ENCDEC:
+        return AUDIO_FRAMES
+    if cfg.family == ArchFamily.VLM:
+        return IMAGE_PATCHES
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for the dry-run (no allocation)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Abstract inputs for (arch x input-shape), per DESIGN §4.
+
+    train  -> {tokens, (enc_frames|images)}
+    prefill-> {tokens, positions, cache, (extras)}
+    decode -> {tokens (B,), seq_lens (B,), cache at seq_len context}
+    """
+    B_, T = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    enc_len = default_enc_len(cfg)
+    d = cfg.d_model
+
+    if shape.kind == "train":
+        specs: Dict[str, Any] = {"tokens": sds((B_, T), i32)}
+        if cfg.family == ArchFamily.ENCDEC:
+            specs["enc_frames"] = sds((B_, enc_len, d), dtype)
+        if cfg.family == ArchFamily.VLM:
+            specs["images"] = sds((B_, enc_len, d), dtype)
+        return specs
+
+    chunk = T if shape.kind == "prefill" else 1
+    cache = jax.eval_shape(
+        lambda: B.init_cache(cfg, B_, T, dtype, enc_len=enc_len, chunk=chunk))
+
+    if shape.kind == "prefill":
+        specs = {
+            "tokens": sds((B_, T), i32),
+            "positions": sds((B_, T), i32),
+            "cache": cache,
+        }
+        if cfg.family == ArchFamily.ENCDEC:
+            specs["extras"] = {"enc_frames": sds((B_, enc_len, d), dtype)}
+        if cfg.family == ArchFamily.VLM:
+            specs["extras"] = {"images": sds((B_, enc_len, d), dtype)}
+        return specs
+
+    # decode: ONE new token against a seq_len-deep cache
+    return {
+        "tokens": sds((B_,), i32),
+        "seq_lens": sds((B_,), i32),
+        "cache": cache,
+    }

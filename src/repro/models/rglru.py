@@ -1,0 +1,89 @@
+"""RG-LRU recurrent block (RecurrentGemma, arXiv:2402.19427) in pure JAX.
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+a_t = exp(-c * softplus(Lambda) * sigma(r_t)),  c = 8
+
+Train/prefill use jax.lax.associative_scan over time; decode is one step.
+The scan core is the target of kernels/rglru_scan.py.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.ssm import causal_conv
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    w = cfg.rglru.lru_width or d
+    ks = jax.random.split(key, 6)
+    # Lambda init so a^c in (0.9, 0.999) roughly (paper appendix)
+    u = jax.random.uniform(ks[4], (w,), minval=0.9 ** 2, maxval=0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log(u)/c)
+    return {
+        "w_x": dense_init(ks[0], (d, w), dtype=dtype),        # recurrent branch in
+        "w_gate_branch": dense_init(ks[1], (d, w), dtype=dtype),  # gelu branch
+        "conv_w": dense_init(ks[2], (cfg.rglru.conv_width, w), scale=0.2,
+                             dtype=dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": dense_init(ks[3], (w, w), scale=0.02, dtype=dtype),  # recurrence gate
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": dense_init(ks[5], (w, w), scale=0.02, dtype=dtype),  # input gate
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lam": lam.astype(jnp.float32),
+        "w_out": dense_init(jax.random.fold_in(key, 7), (w, d),
+                            scale=0.02 / math.sqrt(2 * cfg.num_layers),
+                            dtype=dtype),
+    }
+
+
+def rglru_scan(a, bx, h0=None):
+    """First-order linear recurrence via associative scan.
+
+    a, bx: (B, T, W) fp32; h_t = a_t h_{t-1} + bx_t. Returns (h_all, h_T)."""
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+    _, h_all = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h_all, h_all[:, -1]
+
+
+def rglru_core(p, x, *, h0=None, decode: bool = False):
+    """x: (B, T, W) post-conv activations. Returns (y, h_T) in fp32 state."""
+    f32 = jnp.float32
+    r = jax.nn.sigmoid((x @ p["w_a"]).astype(f32) + p["b_a"])
+    i = jax.nn.sigmoid((x @ p["w_i"]).astype(f32) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r              # (B,T,W)
+    a = jnp.exp(log_a)
+    gated_x = i * x.astype(f32)
+    # multiply by sqrt(1 - a^2) for variance preservation
+    bx = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-9)) * gated_x
+    if decode:
+        h0 = jnp.zeros_like(bx[:, 0]) if h0 is None else h0
+        h = a[:, 0] * h0 + bx[:, 0]
+        return h[:, None].astype(x.dtype), h
+    h_all, h_last = rglru_scan(a, bx, h0)
+    return h_all.astype(x.dtype), h_last
+
+
+def rglru_block(p, u, cfg: ModelConfig, *, conv_state=None, rec_state=None,
+                decode: bool = False):
+    """Full RecurrentGemma recurrent block. u: (B, T, d).
+
+    Returns (out, (conv_state, rec_state))."""
+    gate = jax.nn.gelu((u @ p["w_gate_branch"]).astype(jnp.float32)).astype(u.dtype)
+    x = u @ p["w_x"]
+    x, conv_state = causal_conv(x, p["conv_w"], p["conv_b"], conv_state)
+    y, rec_state = rglru_core(p, x, h0=rec_state, decode=decode)
+    return (y * gate) @ p["w_out"], (conv_state, rec_state)

@@ -1,0 +1,189 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block in pure JAX.
+
+Train/prefill use the chunked SSD algorithm (quadratic intra-chunk term +
+lax.scan inter-chunk state passing); decode uses the O(1) recurrent step.
+The intra-chunk core is the target of kernels/ssd_scan.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = s.num_heads or d_inner // s.head_dim
+    return d_inner, nheads, s.head_dim, s.state_dim
+
+
+def init_mamba2_block(key, cfg: ModelConfig, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, H, P, N = ssm_dims(cfg)
+    conv_ch = d_in + 2 * N               # x, B, C pass through the causal conv
+    ks = jax.random.split(key, 4)
+    d_proj = 2 * d_in + 2 * N + H        # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], (d, d_proj), dtype=dtype),
+        "conv_w": dense_init(ks[1], (s.conv_width, conv_ch), scale=0.2, dtype=dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (H,), minval=math.log(1e-3),
+                                       maxval=math.log(1e-1))))).astype(jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_w": jnp.zeros((d_in,), dtype),
+        "out_proj": dense_init(ks[3], (d_in, d),
+                               scale=0.02 / math.sqrt(2 * cfg.num_layers),
+                               dtype=dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD (training / prefill)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x:  (B, T, H, P)   inputs per head
+    dt: (B, T, H)      discretization steps (post-softplus, >0)
+    A:  (H,)           negative real decay
+    Bm: (B, T, N)      input projection (single group)
+    Cm: (B, T, N)      output projection
+    h0: optional (B, H, P, N) initial state
+    Returns y: (B, T, H, P), final state (B, H, P, N).
+    """
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    pad = (-T) % chunk
+    if pad:  # zero-dt padding is state-neutral (a=1, no input contribution)
+        zf = lambda a: jnp.concatenate(
+            [a, jnp.zeros(a.shape[:1] + (pad,) + a.shape[2:], a.dtype)], axis=1)
+        x, dt, Bm, Cm = zf(x), zf(dt), zf(Bm), zf(Cm)
+        T = T + pad
+    nc = T // chunk
+    f32 = jnp.float32
+
+    xr = x.reshape(Bsz, nc, chunk, H, P).astype(f32)
+    dtr = dt.reshape(Bsz, nc, chunk, H).astype(f32)
+    Br = Bm.reshape(Bsz, nc, chunk, N).astype(f32)
+    Cr = Cm.reshape(Bsz, nc, chunk, N).astype(f32)
+
+    a = dtr * A[None, None, None, :]                      # (B,nc,Q,H) log-decay
+    cum_a = jnp.cumsum(a, axis=2)                         # within-chunk cumsum
+    seg_end = cum_a[:, :, -1:, :]                         # (B,nc,1,H)
+
+    # intra-chunk: L[i,j] = exp(cum_a_i - cum_a_j) for i >= j
+    li = cum_a[:, :, :, None, :]                          # (B,nc,Q,1,H)
+    lj = cum_a[:, :, None, :, :]                          # (B,nc,1,Q,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(li - lj), 0.0)
+    cb = jnp.einsum("bzin,bzjn->bzij", Cr, Br)            # (B,nc,Q,Q)
+    w = cb[..., None] * L                                 # (B,nc,Q,Q,H)
+    xdt = xr * dtr[..., None]                             # (B,nc,Q,H,P)
+    y_intra = jnp.einsum("bzijh,bzjhp->bzihp", w, xdt)
+
+    # per-chunk state contribution: decay-to-chunk-end applied to each token
+    decay_to_end = jnp.exp(seg_end - cum_a)               # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bzjn,bzjhp->bzhpn", Br, xdt * decay_to_end[..., None])
+
+    # inter-chunk scan: h_{c} = exp(seg_end_c) h_{c-1} + s_chunk_c
+    chunk_decay = jnp.exp(seg_end[:, :, 0, :])            # (B,nc,H)
+
+    def step(h, inputs):
+        dec, s = inputs                                   # (B,H), (B,H,P,N)
+        h_prev = h
+        h = dec[:, :, None, None] * h + s
+        return h, h_prev
+
+    init = jnp.zeros((Bsz, H, P, N), f32) if h0 is None else h0.astype(f32)
+    hT, h_prevs = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(s_chunk, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                 # (B,nc,H,P,N)
+
+    # inter-chunk output: C_i · (decay-from-chunk-start * h_prev)
+    decay_from_start = jnp.exp(cum_a)                     # (B,nc,Q,H)
+    y_inter = jnp.einsum("bzin,bzhpn->bzihp", Cr, h_prevs) \
+        * decay_from_start[..., None]
+
+    y = (y_intra + y_inter).reshape(Bsz, T, H, P)
+    if pad:
+        y = y[:, :T - pad]
+    return y.astype(x.dtype), hT
+
+
+def ssd_decode_step(x, dt, A, Bm, Cm, h):
+    """One recurrent step. x: (B,1,H,P), dt: (B,1,H), Bm/Cm: (B,1,N),
+    h: (B,H,P,N) fp32. Returns (y (B,1,H,P), h')."""
+    f32 = jnp.float32
+    xd = x[:, 0].astype(f32) * dt[:, 0][..., None]        # (B,H,P)
+    a = jnp.exp(dt[:, 0].astype(f32) * A)                 # (B,H)
+    h = a[:, :, None, None] * h + jnp.einsum(
+        "bn,bhp->bhpn", Bm[:, 0].astype(f32), xd)
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(f32), h)
+    return y[:, None].astype(x.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (shared by train & decode paths)
+
+
+def causal_conv(x, w, b, state=None):
+    """x: (B, T, Ch), w: (W, Ch) depthwise. state: (B, W-1, Ch) history or None.
+    Returns (y, new_state)."""
+    W = w.shape[0]
+    Bsz, T, Ch = x.shape
+    if state is None:
+        state = jnp.zeros((Bsz, W - 1, Ch), x.dtype)
+    xin = jnp.concatenate([state, x], axis=1)             # (B, W-1+T, Ch)
+    y = jnp.zeros((Bsz, T, Ch), jnp.float32)
+    for i in range(W):
+        y = y + xin[:, i:i + T].astype(jnp.float32) * w[i].astype(jnp.float32)
+    y = (y + b.astype(jnp.float32)).astype(x.dtype)
+    new_state = xin[:, T:]                                # last W-1 inputs
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# full block
+
+
+def _split_proj(z, cfg: ModelConfig):
+    d_in, H, P, N = ssm_dims(cfg)
+    zs = jnp.split(z, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    gate, xs, Bm, Cm, dt_raw = zs
+    return gate, xs, Bm, Cm, dt_raw
+
+
+def mamba2_block(p, u, cfg: ModelConfig, *, conv_state=None, ssm_state=None,
+                 decode: bool = False):
+    """u: (B, T, d). Returns (out, (conv_state, ssm_state))."""
+    d_in, H, P, N = ssm_dims(cfg)
+    z = u @ p["in_proj"]
+    gate, xs, Bm, Cm, dt_raw = _split_proj(z, cfg)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    xbc, conv_state = causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    Bsz, T, _ = xs.shape
+    xh = xs.reshape(Bsz, T, H, P)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    if decode:
+        y, ssm_state = ssd_decode_step(xh, dt, A, Bm, Cm, ssm_state)
+    else:
+        chunk = min(cfg.ssm.chunk_size, T)
+        y, ssm_state = ssd_chunked(xh, dt, A, Bm, Cm, chunk, h0=ssm_state)
+    y = y + xh.astype(jnp.float32).astype(y.dtype) * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(Bsz, T, d_in)
+    y = rms_norm(y * jax.nn.silu(gate), p["norm_w"], cfg.rms_eps)
+    return y @ p["out_proj"], (conv_state, ssm_state)

@@ -1,0 +1,2 @@
+from repro.serving.request import Request, RequestState  # noqa: F401
+from repro.serving.kv_cache import BlockManager  # noqa: F401

@@ -1,0 +1,350 @@
+"""Continuous-batching serving engine over a real JAX model.
+
+Runs the same controller stack as the simulator (Telemetry -> Policy ->
+BlockManager) with actual jit-compiled prefill/decode steps and wall-clock
+TBT feedback. Batch sizes are bucketized (TPU/XLA static shapes — DESIGN §3):
+the decode step runs on the smallest compiled bucket >= active requests, with
+inactive rows masked via position -1.
+
+Intended for reduced-config models on CPU (tests, Fig-3-style curves) and as
+the production template for TPU serving (launch/serve.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig, ServeConfig
+from repro.core.batching import make_policy
+from repro.core.memory_model import MemoryModel
+from repro.core.telemetry import Telemetry
+from repro.models.model import Model
+from repro.serving.kv_cache import BlockManager
+from repro.serving.request import Request, RequestState
+from repro.serving.sampling import sample
+
+
+def _batch_axis(name: str) -> int:
+    return 0 if name == "pos" else 1
+
+
+def cache_take(cache: Dict[str, Any], start: int, n: int) -> Dict[str, Any]:
+    return {k: jax.lax.slice_in_dim(v, start, start + n, axis=_batch_axis(k))
+            for k, v in cache.items()}
+
+
+def cache_put(cache: Dict[str, Any], sub: Dict[str, Any],
+              start: int) -> Dict[str, Any]:
+    return {k: jax.lax.dynamic_update_slice_in_dim(
+        v, sub[k], start, axis=_batch_axis(k)) for k, v in cache.items()}
+
+
+def cache_copy_row(cache: Dict[str, Any], dst: int, src: int) -> Dict[str, Any]:
+    out = {}
+    for k, v in cache.items():
+        ax = _batch_axis(k)
+        row = jax.lax.index_in_dim(v, src, axis=ax, keepdims=False)
+        idx = [slice(None)] * v.ndim
+        idx[ax] = dst
+        out[k] = v.at[tuple(idx)].set(row)
+    return out
+
+
+def cache_clear_row(cache: Dict[str, Any], i: int) -> Dict[str, Any]:
+    out = dict(cache)
+    if "pos" in cache:
+        out["pos"] = cache["pos"].at[i].set(-1)
+    for k in ("conv", "rec", "ssm"):
+        if k in cache:
+            out[k] = cache[k].at[:, i].set(0)
+    return out
+
+
+class Engine:
+    def __init__(self, model: Model, params, serve: ServeConfig,
+                 max_context: int = 256,
+                 buckets: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64),
+                 prefill_chunk: int = 32, enc_len: int = 0, seed: int = 0,
+                 temperature: float = 0.0):
+        self.model = model
+        self.cfg: ModelConfig = model.cfg
+        self.serve = serve
+        self.max_context = max_context
+        self.buckets = tuple(sorted(b for b in buckets if b <= serve.b_max)) \
+            or (serve.b_max,)
+        self.max_slots = max(self.buckets)
+        self.prefill_chunk = prefill_chunk
+        self.params = params
+        self.enc_len = enc_len
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+
+        # +1 spare physical row: the PD-fusion prefilling request lives
+        # outside every decode bucket so masked decode steps can never
+        # touch its (stateful) cache row
+        self.cache = model.init_cache(self.max_slots + 1, max_context,
+                                      enc_len=enc_len,
+                                      prefill_chunk=prefill_chunk)
+        eta = serve.kv_pool_tokens or self.max_slots * max_context
+        self.mem = MemoryModel(self.cfg, hbm_budget_bytes=0,
+                               eps_m=serve.eps_m,
+                               block_size=serve.block_size, eta_tokens=eta)
+        self.blocks = BlockManager(self.mem.eta, serve.block_size)
+        self.tel = Telemetry()
+        self.policy = make_policy(serve, self.mem)
+
+        self.waiting: List[Request] = []
+        self.active: List[Request] = []          # compact: slot i = active[i]
+        # PD fusion: head-of-line request being chunk-prefilled; lives in
+        # the dedicated spare physical row (slot == max_slots)
+        self.prefilling: List[Request] = []
+        self.now0 = time.perf_counter()
+        self._next_rid = 0
+        self.total_decoded = 0
+        self.total_finished = 0
+        self.preemptions = 0
+        self.decode_steps = 0
+        self.batch_trace: List[int] = []
+        self.tbt_trace: List[float] = []
+
+        self._decode_jit = jax.jit(self._decode_fn)
+        self._prefill_jit = jax.jit(self._prefill_fn)
+
+    # -- jit'd steps ----------------------------------------------------------
+    def _decode_fn(self, params, tokens, seq_lens, cache):
+        return self.model.decode_step(params, tokens, seq_lens, cache)
+
+    def _prefill_fn(self, params, tokens, positions, cache, extras):
+        return self.model.prefill(params, tokens, positions, cache, extras)
+
+    # -- public API -------------------------------------------------------------
+    def submit(self, prompt_tokens: List[int], max_new_tokens: int = 0,
+               extras: Optional[Dict[str, jnp.ndarray]] = None,
+               arrival_time: Optional[float] = None) -> Request:
+        t = arrival_time if arrival_time is not None else self._now()
+        mx = max_new_tokens or self.serve.max_new_tokens
+        mx = min(mx, self.max_context - len(prompt_tokens) - 1)
+        r = Request(rid=self._next_rid, arrival_time=t,
+                    prompt_tokens=list(prompt_tokens), max_new_tokens=mx)
+        self._next_rid += 1
+        r.extras = extras
+        self.waiting.append(r)
+        self.tel.on_arrival(t, r.prompt_len)
+        return r
+
+    def warmup(self):
+        """Compile decode buckets + prefill graph so TBT feedback is clean."""
+        for b in self.buckets:
+            sub = cache_take(self.cache, 0, b)
+            toks = jnp.zeros((b,), jnp.int32)
+            lens = jnp.full((b,), -1, jnp.int32)
+            jax.block_until_ready(self._decode_jit(self.params, toks, lens, sub))
+        sub = cache_take(self.cache, 0, 1)
+        tt = jnp.zeros((1, self.prefill_chunk), jnp.int32)
+        pos = jnp.full((1, self.prefill_chunk), -1, jnp.int32)
+        jax.block_until_ready(
+            self._prefill_jit(self.params, tt, pos, sub, None))
+
+    def _now(self) -> float:
+        return time.perf_counter() - self.now0
+
+    # -- scheduling interval -------------------------------------------------------
+    def step(self) -> bool:
+        """One scheduling interval. Returns False when fully idle."""
+        if not self.waiting and not self.active and not self.prefilling:
+            return False
+        tel = self.tel.snapshot(
+            now=self._now(),
+            n_prefill=len(self.waiting) + len(self.prefilling),
+            n_decode=len(self.active), free_tokens=self.blocks.free_tokens)
+        decision = self.policy.step(tel)
+        cap = min(decision.max_batch, self.max_slots)
+
+        # admission
+        while self.waiting \
+                and len(self.active) + len(self.prefilling) < cap:
+            r = self.waiting[0]
+            need = r.prompt_len + 1
+            if self.mem.bytes_per_token == 0:
+                need = self.serve.block_size
+            if not self.blocks.allocate(r.rid, 0, need):
+                break
+            self.waiting.pop(0)
+            if self.serve.chunked_prefill:
+                r.state = RequestState.PREFILLING
+                r.prefill_pos = 0
+                self.prefilling.append(r)
+            else:
+                self._prefill_request(r)
+
+        self._preempt_if_needed()
+        if self.serve.chunked_prefill:
+            # PD fusion: one fused interval = a prefill chunk (within the
+            # controller's token budget) + the decode batch; TBT accounts
+            # for both (the paper's adaptive-chunk-size scenario)
+            budget = decision.chunk_budget \
+                or self.serve.chunk_budget_tokens
+            chunk_ms = self._advance_prefill(budget)
+            if self.active:
+                self._decode_once(extra_ms=chunk_ms)
+        elif self.active:
+            self._decode_once()
+        return True
+
+    # -- PD fusion internals ----------------------------------------------------
+    def _advance_prefill(self, budget_tokens: int) -> float:
+        """Advance the head-of-line prefilling request by one chunk
+        (<= budget). Returns wall-clock ms spent."""
+        if not self.prefilling or budget_tokens <= 0:
+            return 0.0
+        r = self.prefilling[0]
+        slot = self.max_slots          # dedicated spare row
+        if r.prefill_pos == 0 and r.slot != slot:
+            self.cache = cache_clear_row(self.cache, slot)
+            r.slot = slot
+        take = min(budget_tokens, self.prefill_chunk,
+                   r.prompt_len - r.prefill_pos)
+        piece = r.prompt_tokens[r.prefill_pos:r.prefill_pos + take]
+        tt = jnp.array([piece], jnp.int32)
+        pos = jnp.array([list(range(r.prefill_pos,
+                                    r.prefill_pos + take))], jnp.int32)
+        ex = getattr(r, "extras", None) if r.prefill_pos == 0 else None
+        sub = cache_take(self.cache, slot, 1)
+        t0 = time.perf_counter()
+        logits, sub = self._prefill_jit(self.params, tt, pos, sub, ex)
+        logits = jax.block_until_ready(logits)
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        self.cache = cache_put(self.cache, sub, slot)
+        r.prefill_pos += take
+        if r.prefill_pos >= r.prompt_len:
+            self.prefilling.pop(0)
+            # promote: move the finished row into the running region
+            dst = len(self.active)
+            self.cache = cache_copy_row(self.cache, dst, slot)
+            r.slot = dst
+            r.state = RequestState.RUNNING
+            r.first_token_time = self._now()
+            r.output_tokens.append(int(jnp.argmax(logits[0, take - 1])))
+            self.active.append(r)
+        return dt_ms
+
+    def run(self, max_steps: int = 100_000) -> int:
+        steps = 0
+        while self.step() and steps < max_steps:
+            steps += 1
+        return steps
+
+    # -- internals ---------------------------------------------------------------
+    def _prefill_request(self, r: Request):
+        slot = len(self.active)
+        r.slot = slot
+        r.state = RequestState.PREFILLING
+        self.cache = cache_clear_row(self.cache, slot)
+        chunk = self.prefill_chunk
+        toks = r.prompt_tokens
+        sub = cache_take(self.cache, slot, 1)
+        extras = getattr(r, "extras", None)
+        last_logits = None
+        # exact-size chunks: stateful families (SSM conv/recurrence) must not
+        # see pad tokens — full chunks + one exact-size tail call (jit caches
+        # one graph per distinct tail length)
+        pieces = [(s, toks[s:s + chunk]) for s in range(0, len(toks), chunk)]
+        for start, piece in pieces:
+            tt = jnp.array([piece], jnp.int32)
+            pos = jnp.array([list(range(start, start + len(piece)))], jnp.int32)
+            ex = extras if start == 0 else None
+            logits, sub = self._prefill_jit(self.params, tt, pos, sub, ex)
+            last_logits = logits[0, len(piece) - 1]
+        self.cache = cache_put(self.cache, sub, slot)
+        r.state = RequestState.RUNNING
+        r.first_token_time = self._now()
+        r.output_tokens.append(int(jnp.argmax(last_logits)))
+        self.active.append(r)
+
+    def _preempt_if_needed(self):
+        while self.active:
+            need = sum(self.blocks.blocks_needed(r.context_len, 1, r.rid)
+                       for r in self.active)
+            if need <= self.blocks.free_blocks:
+                return
+            victim = self.active[-1]  # newest (vLLM recompute policy)
+            self._evict(len(self.active) - 1, victim)
+
+    def _evict(self, slot: int, r: Request):
+        self.blocks.free(r.rid)
+        r.state = RequestState.WAITING
+        r.output_tokens.clear()
+        r.tbt_samples.clear()
+        last = len(self.active) - 1
+        if slot != last:
+            self.cache = cache_copy_row(self.cache, slot, last)
+            self.active[slot] = self.active[last]
+            self.active[slot].slot = slot
+        self.active.pop()
+        self.waiting.insert(0, r)
+        self.preemptions += 1
+
+    def _decode_once(self, extra_ms: float = 0.0):
+        n = len(self.active)
+        ge = [b for b in self.buckets if b >= n]
+        bucket = min(ge) if ge else self.max_slots
+        toks = [r.output_tokens[-1] for r in self.active] + [0] * (bucket - n)
+        # the pending token sits at absolute position context_len - 1
+        lens = [r.context_len - 1 for r in self.active] + [-1] * (bucket - n)
+        tt = jnp.array(toks, jnp.int32)
+        ll = jnp.array(lens, jnp.int32)
+        sub = cache_take(self.cache, 0, bucket)
+
+        t0 = time.perf_counter()
+        logits, sub = self._decode_jit(self.params, tt, ll, sub)
+        logits = jax.block_until_ready(logits)
+        dt_ms = (time.perf_counter() - t0) * 1e3 + extra_ms
+
+        self.cache = cache_put(self.cache, sub, 0)
+        self.key, sk = jax.random.split(self.key)
+        next_toks = [int(x) for x in sample(logits[:n], sk, self.temperature)]
+
+        self.tel.on_decode_step(dt_ms, n)
+        self.tbt_trace.append(dt_ms)
+        self.batch_trace.append(n)
+        self.decode_steps += 1
+        self.total_decoded += n
+
+        finished = []
+        for i, r in enumerate(self.active):
+            self.blocks.allocate(r.rid, r.context_len, 1)
+            r.output_tokens.append(next_toks[i])
+            r.tbt_samples.append(dt_ms)
+            if len(r.output_tokens) >= r.max_new_tokens \
+                    or r.context_len >= self.max_context - 1:
+                finished.append(i)
+        for i in sorted(finished, reverse=True):
+            r = self.active[i]
+            r.state = RequestState.FINISHED
+            r.finish_time = self._now()
+            self.tel.on_completion(len(r.output_tokens))
+            self.blocks.free(r.rid)
+            last = len(self.active) - 1
+            if i != last:
+                self.cache = cache_copy_row(self.cache, i, last)
+                self.active[i] = self.active[last]
+                self.active[i].slot = i
+            self.active.pop()
+            self.total_finished += 1
+
+    # -- metrics ---------------------------------------------------------------
+    def summary(self) -> Dict[str, float]:
+        el = self._now()
+        return {
+            "throughput_tok_s": self.total_decoded / max(el, 1e-9),
+            "decode_steps": self.decode_steps,
+            "mean_batch": (sum(self.batch_trace) / len(self.batch_trace))
+            if self.batch_trace else 0.0,
+            "tbt_ms_mean": (sum(self.tbt_trace) / len(self.tbt_trace))
+            if self.tbt_trace else 0.0,
+            "finished": self.total_finished,
+            "preemptions": self.preemptions,
+        }

@@ -1,0 +1,62 @@
+"""Block-granular KV pool accounting (vLLM-style allocator).
+
+On TPU the physical cache is a contiguous padded tensor per batch slot
+(DESIGN §3); paging lives at the *allocator* level: this class tracks block
+ownership so the scheduler sees the same free-token signal a paged GPU
+allocator would provide, and admission control + preemption use it. The
+block table per request is maintained (host-side) so the accounting is
+faithful to the paper's vLLM deployment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+
+@dataclasses.dataclass
+class BlockManager:
+    total_tokens: int                 # eta: pool capacity in tokens
+    block_size: int = 16
+
+    def __post_init__(self):
+        self.num_blocks = self.total_tokens // self.block_size
+        self._free: List[int] = list(range(self.num_blocks))
+        self.tables: Dict[int, List[int]] = {}     # rid -> block ids
+
+    # -- queries ------------------------------------------------------------
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def free_tokens(self) -> int:
+        return self.free_blocks * self.block_size
+
+    def used_tokens_of(self, rid: int) -> int:
+        return len(self.tables.get(rid, ())) * self.block_size
+
+    def blocks_needed(self, cur_tokens: int, new_tokens: int, rid: int) -> int:
+        have = len(self.tables.get(rid, ()))
+        need = -(-(cur_tokens + new_tokens) // self.block_size)  # ceil div
+        return max(need - have, 0)
+
+    def can_allocate(self, cur_tokens: int, new_tokens: int, rid: int) -> bool:
+        return self.blocks_needed(cur_tokens, new_tokens, rid) <= self.free_blocks
+
+    # -- mutations ------------------------------------------------------------
+    def allocate(self, rid: int, cur_tokens: int, new_tokens: int) -> bool:
+        n = self.blocks_needed(cur_tokens, new_tokens, rid)
+        if n > self.free_blocks:
+            return False
+        tbl = self.tables.setdefault(rid, [])
+        for _ in range(n):
+            tbl.append(self._free.pop())
+        return True
+
+    def free(self, rid: int) -> None:
+        for b in self.tables.pop(rid, ()):
+            self._free.append(b)
+
+    def reset(self) -> None:
+        self._free = list(range(self.num_blocks))
+        self.tables.clear()

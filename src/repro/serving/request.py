@@ -1,0 +1,56 @@
+"""Request lifecycle for the serving engine & simulator."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"        # queued, no KV allocated
+    PREFILLING = "prefilling"  # chunked prefill in progress
+    RUNNING = "running"        # decoding
+    PREEMPTED = "preempted"    # evicted; will re-prefill (recompute policy)
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival_time: float
+    prompt_tokens: Optional[List[int]] = None   # real engine
+    prompt_len: int = 0                          # simulator (len only)
+    max_new_tokens: int = 128
+    true_output_len: int = 0                     # simulator: sampled a priori
+
+    state: RequestState = RequestState.WAITING
+    prefill_pos: int = 0                         # chunked-prefill progress
+    output_tokens: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1                               # engine batch slot
+    first_token_time: float = -1.0
+    finish_time: float = -1.0
+    tbt_samples: List[float] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        if self.prompt_tokens is not None and self.prompt_len == 0:
+            self.prompt_len = len(self.prompt_tokens)
+
+    @property
+    def output_len(self) -> int:
+        return len(self.output_tokens) if self.output_tokens else self._sim_outlen
+
+    _sim_outlen: int = 0
+
+    @property
+    def context_len(self) -> int:
+        return self.prompt_len + max(len(self.output_tokens), self._sim_outlen)
+
+    def sim_emit_token(self):
+        self._sim_outlen += 1
+
+    @property
+    def done(self) -> bool:
+        n_out = max(len(self.output_tokens), self._sim_outlen)
+        if self.true_output_len:
+            return n_out >= min(self.true_output_len, self.max_new_tokens)
+        return n_out >= self.max_new_tokens

@@ -1,0 +1,272 @@
+"""Discrete-event simulator of a continuous-batching serving engine.
+
+Runs the SAME controller stack (Telemetry -> Policy -> BlockManager admission)
+as the real JAX engine, replacing the model step with the CostModel time law
+and pre-sampled output lengths. This is how the paper's GPU-scale tables
+(LLaMA-65B/70B, PanGu-7/38/135B) are reproduced on CPU; the scheduling code
+under test is identical, byte for byte.
+
+Step semantics mirror vLLM 0.x (the paper's substrate):
+  * non-fused mode: a step is EITHER a prefill batch (when the policy admits
+    waiting requests and prefill work exists) OR one decode iteration.
+  * PD-fusion mode (chunked prefill): each step packs `chunk_budget` prefill
+    tokens alongside all running decodes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import random
+from typing import Dict, List, Optional
+
+from repro.config.base import ModelConfig, ServeConfig
+from repro.core.batching import BatchDecision, Policy, bucketize, make_policy
+from repro.core.memory_model import MemoryModel
+from repro.core.telemetry import Telemetry
+from repro.serving.cost_model import CostModel
+from repro.serving.kv_cache import BlockManager
+from repro.serving.request import Request, RequestState
+
+
+@dataclasses.dataclass
+class LengthDist:
+    """Request length sampler: lognormal-ish around the paper's means."""
+    mean_in: float
+    mean_out: float
+    cv_in: float = 0.3          # coefficient of variation
+    cv_out: float = 0.5
+    fixed: bool = False         # PanGu rows: exactly 128/128
+
+    def sample(self, rng: random.Random):
+        if self.fixed:
+            return int(self.mean_in), int(self.mean_out)
+        li = max(1, int(rng.lognormvariate(*_lognorm(self.mean_in, self.cv_in))))
+        lo = max(1, int(rng.lognormvariate(*_lognorm(self.mean_out, self.cv_out))))
+        return li, lo
+
+
+def _lognorm(mean: float, cv: float):
+    import math
+    sigma2 = math.log(1 + cv * cv)
+    mu = math.log(mean) - sigma2 / 2
+    return mu, math.sqrt(sigma2)
+
+
+@dataclasses.dataclass
+class SimResult:
+    total_tokens: int = 0
+    duration_s: float = 0.0
+    finished: int = 0
+    preemptions: int = 0
+    oom_events: int = 0
+    tbt_ms_mean: float = 0.0
+    tbt_ms_p95: float = 0.0
+    ttft_p90_s: float = 0.0         # time-to-first-token (queueing + prefill)
+    sla_attainment: float = 0.0     # fraction of decode steps within SLA
+    mean_batch: float = 0.0
+    batch_trace: List[int] = dataclasses.field(default_factory=list)
+    decisions: List[BatchDecision] = dataclasses.field(default_factory=list)
+
+    @property
+    def throughput(self) -> float:
+        return self.total_tokens / max(self.duration_s, 1e-9)
+
+
+class ServingSimulator:
+    def __init__(self, cfg: ModelConfig, serve: ServeConfig, cost: CostModel,
+                 lengths: LengthDist, seed: int = 0,
+                 policy: Optional[Policy] = None):
+        self.cfg = cfg
+        self.serve = serve
+        self.cost = cost
+        self.lengths = lengths
+        self.rng = random.Random(seed)
+
+        pool_bytes = serve.hbm_budget_bytes or cost.kv_pool_bytes()
+        self.mem = MemoryModel(cfg, pool_bytes, eps_m=serve.eps_m,
+                               block_size=serve.block_size,
+                               eta_tokens=serve.kv_pool_tokens)
+        eta = serve.kv_pool_tokens or self.mem.eta
+        if eta == 0:  # attention-free: cap by request state instead
+            eta = self.mem.max_requests_state_only() * serve.block_size
+        self.blocks = BlockManager(eta, serve.block_size)
+        self.tel = Telemetry(prior_mean_in=lengths.mean_in,
+                             prior_mean_out=lengths.mean_out)
+        self.policy = policy or make_policy(serve, self.mem)
+
+        self.waiting: List[Request] = []
+        self.running: List[Request] = []
+        self._all: List[Request] = []
+        self.now = 0.0
+        self.res = SimResult()
+        self._tbts: List[float] = []
+        self._sla_ok = 0
+        self._sla_steps = 0
+
+    # -- workload -------------------------------------------------------------
+    def add_requests(self, n: int, arrival_rate: float = 0.0):
+        """arrival_rate == 0 => infinite backlog (all at t=0, paper Table I)."""
+        t = 0.0
+        for i in range(n):
+            li, lo = self.lengths.sample(self.rng)
+            self.waiting.append(Request(
+                rid=i, arrival_time=t, prompt_len=li, true_output_len=lo,
+                max_new_tokens=self.serve.max_new_tokens))
+            if arrival_rate > 0:
+                t += self.rng.expovariate(arrival_rate)
+        self.waiting.sort(key=lambda r: r.arrival_time)
+        self._all.extend(self.waiting)
+
+    # -- scheduling interval ----------------------------------------------------
+    def _snapshot(self):
+        arrived = [r for r in self.waiting if r.arrival_time <= self.now]
+        return self.tel.snapshot(
+            now=self.now, n_prefill=len(arrived), n_decode=len(self.running),
+            free_tokens=self.blocks.free_tokens)
+
+    def _admit(self, decision: BatchDecision):
+        """Admission control: fill up to max_batch respecting the block pool."""
+        cap = bucketize(decision.max_batch, self.serve.batch_buckets) \
+            if self.serve.batch_buckets else decision.max_batch
+        admitted = []
+        for r in list(self.waiting):
+            if len(self.running) + len(admitted) >= cap:
+                break
+            if r.arrival_time > self.now:
+                break
+            need = r.context_len + 1  # context covers recompute re-prefill
+            if self.mem.bytes_per_token == 0:
+                need = self.serve.block_size  # state-only families
+            blocks_needed = self.blocks.blocks_needed(0, need, r.rid)
+            watermark = max(self.blocks.num_blocks // 100, 1)  # vLLM 1%
+            if self.blocks.free_blocks - blocks_needed < watermark:
+                self.res.oom_events += 1
+                break
+            self.blocks.allocate(r.rid, 0, need)
+            admitted.append(r)
+        for r in admitted:
+            self.waiting.remove(r)
+            r.state = RequestState.PREFILLING
+            r.prefill_pos = 0
+        return admitted
+
+    def _preempt_if_needed(self):
+        """On pool exhaustion mid-decode, evict newest requests (recompute)."""
+        while self.running:
+            grow = [r for r in self.running
+                    if self.blocks.blocks_needed(r.context_len, 1, r.rid) > 0]
+            need = sum(self.blocks.blocks_needed(r.context_len, 1, r.rid)
+                       for r in grow)
+            if need <= self.blocks.free_blocks:
+                return
+            victim = self.running.pop()  # newest (vLLM recompute policy)
+            self.blocks.free(victim.rid)
+            victim.state = RequestState.WAITING
+            victim.prefill_pos = 0
+            # vLLM recompute: generated tokens are REPLAYED as prefill (they
+            # are kept, not regenerated) — context_len stays, only the KV is
+            # rebuilt. The re-prefill cost lands in _prefill_step via
+            # context_len.
+            self.waiting.insert(0, victim)
+            self.res.preemptions += 1
+
+    # -- steps -------------------------------------------------------------------
+    def _prefill_step(self, reqs: List[Request]):
+        # context_len covers recompute-after-preemption (prompt + kept output)
+        toks = sum(r.context_len for r in reqs)
+        ctx = toks / max(len(reqs), 1)
+        dt = self.cost.tau_step_s(0, 0.0, prefill_tokens=toks, prefill_ctx=ctx)
+        self.now += dt
+        for r in reqs:
+            r.state = RequestState.RUNNING
+            r.first_token_time = self.now
+            self.running.append(r)
+
+    def _decode_step(self, fused_prefill: List[Request], chunk_budget: int):
+        b = len(self.running)
+        mean_ctx = sum(r.context_len for r in self.running) / max(b, 1)
+        # grow KV by one token per running request
+        for r in self.running:
+            self.blocks.allocate(r.rid, r.context_len, 1)
+        pf_tokens = 0
+        if fused_prefill:
+            budget = chunk_budget
+            for r in fused_prefill:
+                take = min(budget - pf_tokens, r.prompt_len - r.prefill_pos)
+                if take <= 0:
+                    break
+                r.prefill_pos += take
+                pf_tokens += take
+        dt = self.cost.tau_step_s(b, mean_ctx, prefill_tokens=pf_tokens,
+                                  prefill_ctx=mean_ctx)
+        self.now += dt
+        tbt_ms = dt * 1e3
+        if b:
+            self.tel.on_decode_step(tbt_ms, b)
+            self._tbts.append(tbt_ms)
+            self._sla_steps += 1
+            if self.serve.d_sla_ms <= 0 or tbt_ms <= self.serve.d_sla_ms \
+                    + self.serve.eps_d_ms:
+                self._sla_ok += 1
+        # finished prefill chunks promote to running
+        for r in list(fused_prefill):
+            if r.prefill_pos >= r.prompt_len:
+                r.state = RequestState.RUNNING
+                r.first_token_time = self.now
+                self.running.append(r)
+                fused_prefill.remove(r)
+        # token emission + completion
+        self.res.total_tokens += b
+        for r in list(self.running):
+            r.sim_emit_token()
+            if r.done:
+                r.state = RequestState.FINISHED
+                r.finish_time = self.now
+                self.tel.on_completion(r.output_len)
+                self.blocks.free(r.rid)
+                self.running.remove(r)
+                self.res.finished += 1
+        self.res.batch_trace.append(b)
+
+    # -- main loop -----------------------------------------------------------------
+    def run(self, max_steps: int = 200_000) -> SimResult:
+        for r in self.waiting:
+            self.tel.on_arrival(r.arrival_time, r.prompt_len)
+        pending_prefill: List[Request] = []
+        steps = 0
+        while (self.waiting or self.running or pending_prefill) \
+                and steps < max_steps:
+            steps += 1
+            # idle-advance to next arrival if nothing to do
+            if not self.running and not pending_prefill and self.waiting \
+                    and self.waiting[0].arrival_time > self.now:
+                self.now = self.waiting[0].arrival_time
+            tel = self._snapshot()
+            decision = self.policy.step(tel)
+            self.res.decisions.append(decision)
+            admitted = self._admit(decision)
+            self._preempt_if_needed()
+            if self.serve.chunked_prefill:
+                pending_prefill.extend(admitted)
+                self._decode_step(pending_prefill,
+                                  decision.chunk_budget
+                                  or self.serve.chunk_budget_tokens)
+            else:
+                if admitted:
+                    self._prefill_step(admitted)
+                if self.running:
+                    self._decode_step([], 0)
+        self.res.duration_s = self.now
+        ttfts = sorted(r.first_token_time - r.arrival_time
+                       for r in self._all if r.first_token_time >= 0)
+        if ttfts:
+            self.res.ttft_p90_s = ttfts[int(0.9 * (len(ttfts) - 1))]
+        if self._tbts:
+            s = sorted(self._tbts)
+            self.res.tbt_ms_mean = sum(s) / len(s)
+            self.res.tbt_ms_p95 = s[int(0.95 * (len(s) - 1))]
+        if self._sla_steps:
+            self.res.sla_attainment = self._sla_ok / self._sla_steps
+        if self.res.batch_trace:
+            self.res.mean_batch = sum(self.res.batch_trace) / len(self.res.batch_trace)
+        return self.res

@@ -1,0 +1,82 @@
+"""Non-stationary workloads: the paper's lambda(t) dynamics (§II-B).
+
+Generators produce (arrival_time, prompt_len, output_len) streams for the
+simulator: Poisson baseline, square-wave bursts (traffic spikes), diurnal
+sinusoid, and replay from a JSONL trace file.
+"""
+from __future__ import annotations
+
+import json
+import math
+import random
+from typing import Iterator, List, Tuple
+
+from repro.serving.request import Request
+from repro.serving.sim import LengthDist, ServingSimulator
+
+Arrival = Tuple[float, int, int]   # (t, l_in, l_out)
+
+
+def poisson(rate: float, n: int, lengths: LengthDist,
+            seed: int = 0) -> List[Arrival]:
+    rng = random.Random(seed)
+    t, out = 0.0, []
+    for _ in range(n):
+        li, lo = lengths.sample(rng)
+        out.append((t, li, lo))
+        t += rng.expovariate(rate)
+    return out
+
+
+def bursty(base_rate: float, burst_rate: float, period_s: float,
+           duty: float, n: int, lengths: LengthDist,
+           seed: int = 0) -> List[Arrival]:
+    """Square-wave lambda(t): base_rate, spiking to burst_rate for
+    duty*period every period."""
+    rng = random.Random(seed)
+    t, out = 0.0, []
+    for _ in range(n):
+        phase = (t % period_s) / period_s
+        rate = burst_rate if phase < duty else base_rate
+        li, lo = lengths.sample(rng)
+        out.append((t, li, lo))
+        t += rng.expovariate(rate)
+    return out
+
+
+def diurnal(mean_rate: float, amplitude: float, period_s: float, n: int,
+            lengths: LengthDist, seed: int = 0) -> List[Arrival]:
+    rng = random.Random(seed)
+    t, out = 0.0, []
+    for _ in range(n):
+        rate = max(mean_rate * (1 + amplitude *
+                                math.sin(2 * math.pi * t / period_s)), 1e-3)
+        li, lo = lengths.sample(rng)
+        out.append((t, li, lo))
+        t += rng.expovariate(rate)
+    return out
+
+
+def save_trace(path: str, arrivals: List[Arrival]) -> None:
+    with open(path, "w") as f:
+        for t, li, lo in arrivals:
+            f.write(json.dumps({"t": t, "l_in": li, "l_out": lo}) + "\n")
+
+
+def load_trace(path: str) -> List[Arrival]:
+    out = []
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            out.append((float(r["t"]), int(r["l_in"]), int(r["l_out"])))
+    return out
+
+
+def feed(sim: ServingSimulator, arrivals: List[Arrival]) -> None:
+    """Inject a pre-built arrival stream into a simulator."""
+    for i, (t, li, lo) in enumerate(arrivals):
+        sim.waiting.append(Request(
+            rid=i, arrival_time=t, prompt_len=li, true_output_len=lo,
+            max_new_tokens=sim.serve.max_new_tokens))
+    sim.waiting.sort(key=lambda r: r.arrival_time)
+    sim._all.extend(sim.waiting)

@@ -1,0 +1,64 @@
+"""Minimal dependency-free checkpointing: flattened pytree -> .npz."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _base(path: str) -> str:
+    return path if path.endswith(".npz") else path + ".npz"
+
+
+def save_checkpoint(path: str, params, opt_state, step: int) -> None:
+    base = _base(path)
+    os.makedirs(os.path.dirname(base) or ".", exist_ok=True)
+    flat = _flatten({"params": params, "opt": opt_state})
+    np.savez(base, **flat)
+    with open(base + ".meta.json", "w") as f:
+        json.dump({"step": step, "keys": sorted(flat)}, f)
+
+
+def load_checkpoint(path: str, params_like, opt_like) -> Tuple[Any, Any, int]:
+    base = _base(path)
+    data = np.load(base)
+    with open(base + ".meta.json") as f:
+        meta = json.load(f)
+
+    def rebuild(like, prefix):
+        flat_like, tdef = jax.tree.flatten(like)
+        keys = _flatten(like, prefix)
+        # keys order must match tree.flatten order: rebuild by walking again
+        named = list(_named_leaves(like, prefix))
+        leaves = [data[name] for name, _ in named]
+        return jax.tree.unflatten(tdef, leaves)
+
+    return (rebuild(params_like, "params/"), rebuild(opt_like, "opt/"),
+            meta["step"])
+
+
+def _named_leaves(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k in sorted(tree):  # jax.tree flattens dicts in sorted-key order
+            yield from _named_leaves(tree[k], f"{prefix}{k}/")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _named_leaves(v, f"{prefix}{i}/")
+    else:
+        yield prefix[:-1], tree

@@ -1,0 +1,70 @@
+"""Training loop: jit'd AdamW step + host loop with logging/checkpointing."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig, TrainConfig
+from repro.models.model import Model
+from repro.training.data import MarkovData
+from repro.training.optimizer import adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: int = 0
+
+
+def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
+    """Pure (params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, batch, remat=tcfg.remat),
+            has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, tcfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(model: Model, tcfg: TrainConfig,
+          data: Optional[MarkovData] = None,
+          log: Optional[Callable[[str], None]] = print,
+          checkpoint_path: Optional[str] = None) -> Dict[str, Any]:
+    cfg: ModelConfig = model.cfg
+    data = data or MarkovData(cfg, tcfg)
+    key = jax.random.PRNGKey(tcfg.seed)
+    params = model.init(key)
+    opt_state = adamw_init(params)
+    step_fn = jax.jit(make_train_step(model, tcfg), donate_argnums=(0, 1))
+
+    losses: List[float] = []
+    it = data.batches()
+    t0 = time.perf_counter()
+    for step in range(1, tcfg.steps + 1):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if log and (step % tcfg.log_every == 0 or step == 1):
+            log(f"step {step:5d} loss {loss:.4f} "
+                f"lr {float(metrics['lr']):.2e} "
+                f"gnorm {float(metrics['grad_norm']):.2f}")
+    wall = time.perf_counter() - t0
+    if checkpoint_path:
+        from repro.training.checkpoint import save_checkpoint
+        save_checkpoint(checkpoint_path, params, opt_state, tcfg.steps)
+    return {"losses": losses, "params": params, "opt_state": opt_state,
+            "wall_s": wall,
+            "tokens_per_s": tcfg.steps * tcfg.global_batch * tcfg.seq_len / wall}

@@ -1,0 +1,199 @@
+"""Unit + property tests for the paper's Algorithms 1 & 2."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config.base import ServeConfig
+from repro.config.registry import get_config
+from repro.core.batching import (BatchingMemory, BatchingSLA, CombinedPolicy,
+                                 StaticPolicy, bucketize, make_policy)
+from repro.core.memory_model import MemoryModel, norm_cdf, norm_ppf
+from repro.core.telemetry import TelemetrySnapshot
+
+CFG = get_config("granite-3-8b")
+
+
+def mem(budget_gb=64, eps=0.05):
+    return MemoryModel(CFG, int(budget_gb * 2**30), eps_m=eps)
+
+
+def snap(**kw):
+    d = dict(n_prefill_waiting=10, n_decode_running=5, mean_in=128.0,
+             var_in=100.0, mean_out=128.0, var_out=400.0, tbt_ms=40.0,
+             mean_batch=64.0, arrival_rate=5.0, free_tokens=10_000, now=0.0)
+    d.update(kw)
+    return TelemetrySnapshot(**d)
+
+
+# ---------------------------------------------------------------------------
+# norm_ppf / norm_cdf
+
+
+@given(st.floats(0.001, 0.999))
+def test_ppf_cdf_inverse(q):
+    assert abs(norm_cdf(norm_ppf(q)) - q) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1
+
+
+def test_alg1_adjusts_only_with_both_queues():
+    m = mem()
+    cfg = ServeConfig(policy="memory", b_max=4096)
+    pol = BatchingMemory(cfg, m)
+    # no prefill waiting: b stays at previous
+    d0 = pol.step(snap(n_prefill_waiting=0))
+    assert d0.max_batch == cfg.b_max  # b_prev initialized to b_max
+    # both queues active: recomputed from eq. (14)
+    d1 = pol.step(snap())
+    expected = m.b_mem_linear(pol.L0, 256.0)
+    assert d1.max_batch == min(max(expected, 5), cfg.b_max)
+
+
+def test_alg1_respects_running_floor_and_bmax():
+    m = mem(budget_gb=0.001)  # tiny pool -> b_mem small
+    cfg = ServeConfig(policy="memory", b_max=512)
+    pol = BatchingMemory(cfg, m)
+    d = pol.step(snap(n_decode_running=50))
+    assert d.max_batch >= 50          # never below running requests
+    d2 = pol.step(snap(n_decode_running=0, n_prefill_waiting=0))
+    assert d2.max_batch <= 512
+
+
+@given(st.integers(1, 512), st.floats(16, 2048), st.floats(0, 1e5))
+@settings(max_examples=200, deadline=None)
+def test_alg1_output_always_in_bounds(n_run, mean_len, var_len):
+    m = mem()
+    cfg = ServeConfig(policy="memory", b_max=256, b_min=1)
+    pol = BatchingMemory(cfg, m)
+    d = pol.step(snap(n_decode_running=n_run, mean_in=mean_len / 2,
+                      mean_out=mean_len / 2, var_in=var_len, var_out=var_len))
+    assert max(min(n_run, cfg.b_max), cfg.b_min) <= d.max_batch <= max(cfg.b_max, n_run)
+    assert d.max_batch <= max(cfg.b_max, n_run)
+
+
+def test_alg1_monotone_in_memory():
+    """More HBM -> (weakly) larger memory-safe batch."""
+    cfg = ServeConfig(policy="memory", b_max=100_000)
+    bs = []
+    for gb in (8, 32, 128):
+        pol = BatchingMemory(cfg, mem(budget_gb=gb))
+        bs.append(pol.step(snap()).max_batch)
+    assert bs == sorted(bs)
+
+
+def test_alg1_shrinks_with_longer_sequences():
+    cfg = ServeConfig(policy="memory", b_max=100_000)
+    pol = BatchingMemory(cfg, mem())
+    b_short = pol.step(snap(mean_in=64, mean_out=64)).max_batch
+    pol2 = BatchingMemory(cfg, mem())
+    b_long = pol2.step(snap(mean_in=1024, mean_out=1024)).max_batch
+    assert b_long < b_short
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2
+
+
+def slacfg(**kw):
+    d = dict(policy="sla", b_min=1, b_max=256, d_sla_ms=50.0, eps_d_ms=2.0,
+             alpha=16, delta=4)
+    d.update(kw)
+    return ServeConfig(**d)
+
+
+def test_alg2_decreases_batch_when_slow():
+    pol = BatchingSLA(slacfg())
+    d1 = pol.step(snap(tbt_ms=80.0, mean_batch=128))
+    assert d1.max_batch < 128 + 16  # window clamps toward observed batch
+    # keep being slow: bound keeps dropping
+    d2 = pol.step(snap(tbt_ms=80.0, mean_batch=d1.max_batch))
+    assert d2.max_batch <= d1.max_batch
+
+
+def test_alg2_increases_batch_when_fast():
+    pol = BatchingSLA(slacfg())
+    before = pol.step(snap(tbt_ms=10.0, mean_batch=32)).max_batch
+    after = pol.step(snap(tbt_ms=10.0, mean_batch=before)).max_batch
+    assert after >= before
+
+
+def test_alg2_tightens_in_band():
+    pol = BatchingSLA(slacfg())
+    d = pol.step(snap(tbt_ms=50.0, mean_batch=100))
+    assert abs(d.max_batch - 100) <= 16
+
+
+@given(st.lists(st.tuples(st.floats(1, 200), st.integers(1, 256)),
+                min_size=1, max_size=50))
+@settings(max_examples=100, deadline=None)
+def test_alg2_invariants(seq):
+    """Window ordering + bounds hold under any latency/batch feedback."""
+    cfg = slacfg()
+    pol = BatchingSLA(cfg)
+    for tbt, b in seq:
+        d = pol.step(snap(tbt_ms=tbt, mean_batch=b, n_decode_running=0))
+        assert cfg.b_min <= d.max_batch <= cfg.b_max
+        assert pol.b_low <= pol.b_high
+
+
+def test_alg2_converges_to_sla_batch():
+    """With D(b) = 0.25*b ms and SLA 50 ms, the search should settle near
+    b = 200."""
+    cfg = slacfg(b_max=400, alpha=8, delta=2)
+    pol = BatchingSLA(cfg)
+    b = 32
+    for _ in range(60):
+        tbt = 0.25 * b
+        b = pol.step(snap(tbt_ms=tbt, mean_batch=b, n_decode_running=0)).max_batch
+    assert abs(0.25 * b - 50.0) <= 6.0, (b, 0.25 * b)
+
+
+# ---------------------------------------------------------------------------
+# combined + plumbing
+
+
+def test_combined_is_min():
+    m = mem(budget_gb=2)  # memory-limited
+    cfg = ServeConfig(policy="combined", b_max=4096, d_sla_ms=50.0)
+    pol = CombinedPolicy(cfg, m)
+    tel = snap()
+    d = pol.step(tel)
+    assert d.max_batch <= max(d.b_mem, tel.n_decode_running)
+    assert d.max_batch <= max(d.b_sla, tel.n_decode_running)
+
+
+def test_static_policy_fixed():
+    pol = StaticPolicy(ServeConfig(policy="static", b_max=77))
+    for tbt in (1.0, 100.0, 500.0):
+        assert pol.step(snap(tbt_ms=tbt)).max_batch == 77
+
+
+def test_make_policy_dispatch():
+    m = mem()
+    for name, cls in [("static", StaticPolicy), ("memory", BatchingMemory),
+                      ("combined", CombinedPolicy)]:
+        assert isinstance(make_policy(
+            ServeConfig(policy=name, d_sla_ms=50.0), m), cls)
+    assert isinstance(make_policy(
+        ServeConfig(policy="sla", d_sla_ms=50.0), m), BatchingSLA)
+    with pytest.raises(ValueError):
+        make_policy(ServeConfig(policy="nope"), m)
+
+
+@given(st.integers(0, 2000))
+def test_bucketize(b):
+    buckets = (8, 16, 32, 64, 128)
+    out = bucketize(b, buckets)
+    assert out in buckets
+    assert out <= b or b < 8
+
+
+def test_chunked_prefill_budget():
+    m = mem()
+    cfg = ServeConfig(policy="memory", b_max=256, chunked_prefill=True)
+    pol = BatchingMemory(cfg, m)
+    d = pol.step(snap(n_decode_running=30))
+    assert d.chunk_budget == max(d.max_batch - 30, 0)

@@ -1,0 +1,57 @@
+"""BlockManager allocator invariants (unit + stateful property tests)."""
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.kv_cache import BlockManager
+
+
+def test_basic_alloc_free():
+    bm = BlockManager(total_tokens=160, block_size=16)
+    assert bm.num_blocks == 10
+    assert bm.allocate(1, 0, 33)            # 3 blocks
+    assert bm.free_blocks == 7
+    assert bm.allocate(1, 33, 1) is True    # fits in existing 3rd block? 34>48? no: 34 tokens -> 3 blocks
+    assert bm.free_blocks == 7
+    bm.free(1)
+    assert bm.free_blocks == 10
+
+
+def test_allocate_rejects_when_full():
+    bm = BlockManager(total_tokens=64, block_size=16)
+    assert bm.allocate(1, 0, 64)
+    assert not bm.allocate(2, 0, 1)
+    bm.free(1)
+    assert bm.allocate(2, 0, 1)
+
+
+def test_incremental_growth_accounting():
+    bm = BlockManager(total_tokens=160, block_size=16)
+    bm.allocate(7, 0, 16)
+    assert bm.used_tokens_of(7) == 16
+    for t in range(16, 40):
+        bm.allocate(7, t, 1)
+    assert bm.used_tokens_of(7) == 48       # ceil(41/16)=3 blocks
+
+
+@given(st.lists(st.tuples(st.integers(0, 9), st.integers(1, 40),
+                          st.booleans()), max_size=80))
+@settings(max_examples=120, deadline=None)
+def test_never_leaks_or_double_allocates(ops):
+    bm = BlockManager(total_tokens=320, block_size=16)
+    lens = {}
+    for rid, n, free in ops:
+        if free:
+            bm.free(rid)
+            lens.pop(rid, None)
+        else:
+            cur = lens.get(rid, 0)
+            if bm.allocate(rid, cur, n):
+                lens[rid] = cur + n
+        # invariant: free + owned == total
+        owned = sum(len(t) for t in bm.tables.values())
+        assert owned + bm.free_blocks == bm.num_blocks
+        # every request has enough blocks for its tokens
+        for r, ln in lens.items():
+            assert len(bm.tables.get(r, ())) * 16 >= ln
+    # no block owned twice
+    all_blocks = [b for t in bm.tables.values() for b in t] + bm._free
+    assert len(all_blocks) == len(set(all_blocks)) == bm.num_blocks

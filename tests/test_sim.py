@@ -1,0 +1,112 @@
+"""Simulator + cost-model tests: the paper's qualitative laws must emerge."""
+import pytest
+
+from repro.config.base import ServeConfig
+from repro.config.registry import get_config
+from repro.serving.cost_model import CostModel, PROFILES
+from repro.serving.sim import LengthDist, ServingSimulator
+
+CFG70 = get_config("granite-3-8b")  # stand-in; scale set by cost model
+
+
+def run_sim(policy, b_max, n=400, sla=0.0, chunked=False, arrival=0.0,
+            model=CFG70, hw="a100x8", seed=0, mean_in=128, mean_out=128,
+            fixed=True, c0=0.0, c1=0.0):
+    cost = CostModel(model, PROFILES[hw], c0_ms=c0, c1_ms=c1)
+    lengths = LengthDist(mean_in=mean_in, mean_out=mean_out, fixed=fixed)
+    serve = ServeConfig(policy=policy, b_max=b_max, d_sla_ms=sla,
+                        max_new_tokens=mean_out * 4,
+                        chunked_prefill=chunked)
+    sim = ServingSimulator(model, serve, cost, lengths, seed=seed)
+    sim.add_requests(n, arrival_rate=arrival)
+    return sim.run()
+
+
+# ---------------------------------------------------------------------------
+# Fig 3 laws
+
+
+def test_tau_step_linear_in_batch():
+    cost = CostModel(CFG70, PROFILES["a100x8"])
+    taus = [cost.tau_step_ms(b, 512.0) for b in (32, 64, 128, 256)]
+    d1 = taus[1] - taus[0]
+    d2 = taus[2] - taus[1]
+    d3 = (taus[3] - taus[2]) / 2
+    assert d2 == pytest.approx(2 * d1, rel=1e-6)
+    assert d3 == pytest.approx(d1 * 2, rel=1e-6)  # slope constant
+
+
+def test_throughput_concave_increasing():
+    cost = CostModel(CFG70, PROFILES["a100x8"])
+    bs = [64, 128, 192, 256, 320, 384]   # equal spacing for concavity check
+    phi = [b / cost.tau_step_s(b, 512.0) for b in bs]
+    assert all(b > a for a, b in zip(phi, phi[1:]))          # increasing
+    gains = [b - a for a, b in zip(phi, phi[1:])]
+    assert all(g2 < g1 for g1, g2 in zip(gains, gains[1:]))  # diminishing
+
+
+def test_paper_fig3_anchor_points():
+    """Calibrated profile reproduces Fig 3: b=100 -> ~50ms/~2000 tok/s;
+    b=230 -> ~80ms/~2700 tok/s."""
+    cost = CostModel(CFG70, PROFILES["paper-fig3"], c0_ms=28.0, c1_ms=0.225)
+    t100 = cost.tau_step_ms(100, 500.0)
+    t230 = cost.tau_step_ms(230, 500.0)
+    assert t100 == pytest.approx(50.0, abs=2.0)
+    assert t230 == pytest.approx(80.0, abs=2.0)
+    assert 100 / (t100 / 1e3) == pytest.approx(2000, rel=0.05)
+    assert 230 / (t230 / 1e3) == pytest.approx(2875, rel=0.08)
+
+
+# ---------------------------------------------------------------------------
+# dynamic vs static (Table I shape)
+
+
+def test_dynamic_beats_static_throughput():
+    st = run_sim("static", 256)
+    dy = run_sim("memory", 4096)
+    assert st.finished == dy.finished == 400
+    assert dy.throughput > st.throughput * 1.05
+
+
+def test_all_requests_complete_under_all_policies():
+    for pol, sla in [("static", 0.0), ("memory", 0.0), ("sla", 60.0),
+                     ("combined", 60.0)]:
+        res = run_sim(pol, 256, n=150, sla=sla)
+        assert res.finished == 150, pol
+
+
+def test_sla_policy_tracks_latency_band():
+    res = run_sim("sla", 512, n=400, sla=60.0)
+    # mean TBT should settle near (under) the SLA once converged
+    assert res.tbt_ms_mean <= 60.0 * 1.25
+    assert res.sla_attainment >= 0.6
+
+
+def test_combined_never_exceeds_memory_bound():
+    res = run_sim("combined", 4096, n=300, sla=80.0)
+    assert res.finished == 300
+    assert res.oom_events == 0
+
+
+def test_chunked_prefill_mode_completes():
+    res = run_sim("memory", 512, n=200, chunked=True)
+    assert res.finished == 200
+    assert res.throughput > 0
+
+
+def test_poisson_arrivals_idle_advance():
+    res = run_sim("memory", 256, n=100, arrival=50.0)
+    assert res.finished == 100
+    assert res.duration_s >= 100 / 50.0 * 0.5  # at least ~arrival span
+
+
+def test_preemption_on_tight_pool():
+    cost = CostModel(CFG70, PROFILES["a100x8"])
+    lengths = LengthDist(mean_in=128, mean_out=128, cv_out=1.0)
+    serve = ServeConfig(policy="static", b_max=512, max_new_tokens=2048,
+                        kv_pool_tokens=40_000)
+    sim = ServingSimulator(CFG70, serve, cost, lengths, seed=1)
+    sim.add_requests(300)
+    res = sim.run()
+    assert res.finished == 300
+    assert res.preemptions > 0 or res.oom_events > 0

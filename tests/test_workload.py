@@ -1,0 +1,54 @@
+"""Workload generators: rate laws + trace round-trip + sim integration."""
+import os
+
+from repro.config.base import ServeConfig
+from repro.config.registry import get_config
+from repro.serving.cost_model import CostModel, PROFILES
+from repro.serving.sim import LengthDist, ServingSimulator
+from repro.serving.workload import (bursty, diurnal, feed, load_trace,
+                                    poisson, save_trace)
+
+L = LengthDist(mean_in=64, mean_out=64, fixed=True)
+
+
+def rate_in(arrivals, t0, t1):
+    n = sum(1 for t, _, _ in arrivals if t0 <= t < t1)
+    return n / (t1 - t0)
+
+
+def test_poisson_rate():
+    arr = poisson(10.0, 2000, L, seed=0)
+    assert abs(rate_in(arr, 10, 150) - 10.0) < 1.5
+
+
+def test_bursty_rates_differ():
+    arr = bursty(base_rate=2.0, burst_rate=40.0, period_s=100.0, duty=0.2,
+                 n=4000, lengths=L, seed=0)
+    # burst window [0,20) vs quiet [30,90) of the first period
+    assert rate_in(arr, 0, 20) > 5 * rate_in(arr, 30, 90)
+
+
+def test_diurnal_modulates():
+    arr = diurnal(mean_rate=10.0, amplitude=0.9, period_s=200.0, n=4000,
+                  lengths=L, seed=0)
+    peak = rate_in(arr, 40, 60)     # sin peak near t=50
+    trough = rate_in(arr, 140, 160)  # sin trough near t=150
+    assert peak > 2 * trough
+
+
+def test_trace_roundtrip(tmp_path):
+    arr = poisson(5.0, 50, L, seed=1)
+    p = os.path.join(tmp_path, "trace.jsonl")
+    save_trace(p, arr)
+    assert load_trace(p) == [(t, li, lo) for t, li, lo in arr]
+
+
+def test_feed_runs_simulator():
+    cfg = get_config("granite-3-8b")
+    cost = CostModel(cfg, PROFILES["a100x8"])
+    sim = ServingSimulator(
+        cfg, ServeConfig(policy="memory", b_max=256, max_new_tokens=128),
+        cost, L, seed=0)
+    feed(sim, bursty(2.0, 20.0, 30.0, 0.3, 150, L, seed=2))
+    res = sim.run()
+    assert res.finished == 150
