@@ -1,6 +1,13 @@
 """Burst response (paper Fig 1 / §II-B): non-stationary lambda(t) with
 traffic spikes. Shows the controller's batch tracking the load while static
-batching either under-uses the pool or preempt-storms through spikes."""
+batching either under-uses the pool or preempt-storms through spikes.
+
+The PD-fusion rows sweep `n_prefill_lanes` (DESIGN §6): with one lane a
+burst of arrivals serializes prefill behind the head-of-line prompt and the
+decode batch starves; with >= 2 lanes the same chunk budget is packed across
+concurrent prefills, raising decode-batch occupancy and cutting mean TTFT
+while producing the identical output tokens.
+"""
 from __future__ import annotations
 
 import time
@@ -11,18 +18,34 @@ from repro.serving.cost_model import CostModel
 from repro.serving.sim import LengthDist, ServingSimulator
 from repro.serving.workload import bursty, feed
 
+LANE_SWEEP = (1, 2, 4, 8)
 
-def run_policy(policy: str, b_max: int, seed: int = 0):
+
+def make_sim(serve: ServeConfig, seed: int = 0,
+             prefill_chunk: int = 0) -> ServingSimulator:
     cfg = llama3_70b()
     cost = CostModel(cfg, deployment(8), c0_ms=28.0, c1_ms=0.225)
     lengths = LengthDist(mean_in=191.0, mean_out=200.0, cv_out=0.5)
-    serve = ServeConfig(policy=policy, b_max=b_max, max_new_tokens=1024,
-                        kv_pool_tokens=120_000)
-    sim = ServingSimulator(cfg, serve, cost, lengths, seed=seed)
+    sim = ServingSimulator(cfg, serve, cost, lengths, seed=seed,
+                           prefill_chunk=prefill_chunk)
     arrivals = bursty(base_rate=2.0, burst_rate=30.0, period_s=60.0,
                       duty=0.25, n=1200, lengths=lengths, seed=seed)
     feed(sim, arrivals)
-    return sim.run()
+    return sim
+
+
+def run_policy(policy: str, b_max: int, seed: int = 0):
+    serve = ServeConfig(policy=policy, b_max=b_max, max_new_tokens=1024,
+                        kv_pool_tokens=120_000)
+    return make_sim(serve, seed).run()
+
+
+def run_lanes(n_lanes: int, seed: int = 0):
+    serve = ServeConfig(policy="memory", b_max=1024, max_new_tokens=1024,
+                        kv_pool_tokens=120_000, chunked_prefill=True,
+                        chunk_budget_tokens=512, n_prefill_lanes=n_lanes,
+                        prefill_pack="srf")
+    return make_sim(serve, seed, prefill_chunk=128).run()
 
 
 def run(csv_out) -> None:
@@ -36,3 +59,16 @@ def run(csv_out) -> None:
                 f"tput={res.throughput:.0f}tok/s mean_batch={res.mean_batch:.0f} "
                 f"peak_batch={peak} preempt={res.preemptions} "
                 f"oom={res.oom_events} ttft_p90={res.ttft_p90_s:.1f}s")
+    # PD-fusion lane sweep (DESIGN §6)
+    for n_lanes in LANE_SWEEP:
+        t0 = time.perf_counter()
+        res = run_lanes(n_lanes)
+        us = (time.perf_counter() - t0) * 1e6
+        csv_out(f"burst_fused_lanes{n_lanes}", us,
+                f"tput={res.throughput:.0f}tok/s "
+                f"mean_batch={res.mean_batch:.1f} "
+                f"ttft_mean={res.ttft_mean_s:.2f}s "
+                f"ttft_queue={res.ttft_queue_mean_s:.2f}s "
+                f"ttft_prefill={res.ttft_prefill_mean_s:.2f}s "
+                f"lane_occ={res.prefill_lane_occupancy:.2f} "
+                f"tokens={res.total_tokens}")

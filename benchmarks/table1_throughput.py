@@ -34,7 +34,7 @@ DYNAMIC_BMAX = 1024      # operator hard bound for Algorithm 1
 
 
 def run_row(cfg_fn, chips, mean_in, mean_out, n_req, fixed, policy, b_max,
-            seed=0, fig3_law=False):
+            seed=0, fig3_law=False, n_lanes=0):
     cfg = cfg_fn()
     if fig3_law:
         cost = CostModel(cfg, deployment(chips), c0_ms=28.0, c1_ms=0.225)
@@ -42,11 +42,19 @@ def run_row(cfg_fn, chips, mean_in, mean_out, n_req, fixed, policy, b_max,
         cost = CostModel(cfg, deployment(chips))
     lengths = LengthDist(mean_in=mean_in, mean_out=mean_out, fixed=fixed,
                          cv_in=0.4, cv_out=0.6)
+    # n_lanes > 0 switches the row to PD fusion with that many prefill
+    # lanes (DESIGN §6)
     serve = ServeConfig(policy=policy, b_max=b_max,
-                        max_new_tokens=int(mean_out * 6) + 8)
+                        max_new_tokens=int(mean_out * 6) + 8,
+                        chunked_prefill=n_lanes > 0,
+                        n_prefill_lanes=max(n_lanes, 1),
+                        prefill_pack="srf")
     sim = ServingSimulator(cfg, serve, cost, lengths, seed=seed)
     sim.add_requests(n_req)   # infinite backlog: all at t=0 (paper setup)
     return sim.run()
+
+
+PD_LANE_SWEEP = (1, 2, 4)    # PD-fusion lane counts swept on the Fig-3 row
 
 
 def run(csv_out) -> None:
@@ -64,3 +72,16 @@ def run(csv_out) -> None:
             f"gain={gain:+.1f}% paper={paper:+.1f}% "
             f"b_static={st.mean_batch:.0f} b_dyn={dy.mean_batch:.0f} "
             f"preempt={st.preemptions}/{dy.preemptions}")
+    # PD-fusion lane sweep (DESIGN §6) on the paper's Fig-3 deployment row
+    (label, cfg_fn, chips, mi, mo, n, fixed, _, fig3) = ROWS[2]
+    for n_lanes in PD_LANE_SWEEP:
+        t0 = time.perf_counter()
+        fu = run_row(cfg_fn, chips, mi, mo, n, fixed, "memory", DYNAMIC_BMAX,
+                     fig3_law=fig3, n_lanes=n_lanes)
+        us = (time.perf_counter() - t0) * 1e6
+        csv_out(
+            f"table1_{label}_fused_lanes{n_lanes}", us,
+            f"tput={fu.throughput:.0f}tok/s b={fu.mean_batch:.0f} "
+            f"ttft_mean={fu.ttft_mean_s:.2f}s "
+            f"lane_occ={fu.prefill_lane_occupancy:.2f} "
+            f"preempt={fu.preemptions}")

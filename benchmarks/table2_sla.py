@@ -24,9 +24,13 @@ def attainment(cfg_fn, chips, mi, mo, n, chunked, policy, qps, seed=0):
     cfg = cfg_fn()
     cost = CostModel(cfg, deployment(chips, overhead_ms=15.0))
     lengths = LengthDist(mean_in=mi, mean_out=mo, cv_in=0.3, cv_out=0.5)
+    # the PD row runs 4 prefill lanes (DESIGN §6): single-lane fusion
+    # serializes prefill behind the head-of-line prompt under load
     serve = ServeConfig(policy=policy, b_max=256, d_sla_ms=SLA_MS,
                         eps_d_ms=3.0, max_new_tokens=int(mo * 6) + 8,
-                        chunked_prefill=chunked, chunk_budget_tokens=256)
+                        chunked_prefill=chunked, chunk_budget_tokens=256,
+                        n_prefill_lanes=4 if chunked else 1,
+                        prefill_pack="srf")
     sim = ServingSimulator(cfg, serve, cost, lengths, seed=seed)
     sim.add_requests(n, arrival_rate=qps)
     res = sim.run()

@@ -239,6 +239,13 @@ class ServeConfig:
     l0_refresh_interval: int = 32  # L0 offline refresh cadence (intervals)
     chunked_prefill: bool = False  # PD-fusion mode
     chunk_budget_tokens: int = 512 # base token budget per fused step
+    # PD-fusion lanes (DESIGN §6): spare physical cache rows past the decode
+    # buckets; each lane chunk-prefills one request per interval, the
+    # interval's chunk_budget is packed across occupied lanes
+    n_prefill_lanes: int = 1
+    # lane packer policy: "fifo" (arrival order — 1 lane reproduces the
+    # single-spare-row engine bit-for-bit) | "srf" (shortest remaining first)
+    prefill_pack: str = "fifo"
     max_new_tokens: int = 128
     batch_buckets: Tuple[int, ...] = ()  # () => exact batch (CPU), else bucketized
     preempt: str = "recompute"     # TPU path: no swapping (see DESIGN §3)

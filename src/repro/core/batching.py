@@ -6,8 +6,10 @@ Combined                      — b* = min(b_mem, b_SLA)            (paper §III
 Static                        — vLLM-style fixed max batch (the baseline)
 
 Every policy is a pure-Python controller called once per scheduling interval
-with a TelemetrySnapshot; it returns a BatchDecision. The engine/simulator
-enforces the decision (admission control + chunked-prefill token budget).
+with a TelemetrySnapshot; it returns a BatchDecision (the middle layer of the
+controller stack, DESIGN §1). The engine/simulator enforces the decision:
+admission control against the block pool, plus — in PD-fusion mode — the
+chunked-prefill token budget packed across prefill lanes (DESIGN §6).
 """
 from __future__ import annotations
 
@@ -22,6 +24,8 @@ from repro.core.telemetry import TelemetrySnapshot
 
 @dataclasses.dataclass
 class BatchDecision:
+    """One scheduling interval's output: b_t plus the PD-fusion token budget
+    the packer may spend on prefill chunks (DESIGN §1, §6)."""
     max_batch: int                   # b_t: concurrent-request cap this interval
     chunk_budget: int = 0            # PD-fusion token budget (0 = no fusion)
     b_mem: int = 0                   # diagnostics
@@ -29,6 +33,10 @@ class BatchDecision:
 
 
 class Policy:
+    """Controller interface (DESIGN §1): TelemetrySnapshot -> BatchDecision,
+    once per scheduling interval. Stateful subclasses implement the paper's
+    Algorithms 1 & 2."""
+
     name = "base"
 
     def step(self, tel: TelemetrySnapshot) -> BatchDecision:
@@ -36,7 +44,8 @@ class Policy:
 
 
 class StaticPolicy(Policy):
-    """vLLM baseline: a fixed preset max batch size (max_num_seqs)."""
+    """vLLM baseline: a fixed preset max batch size (max_num_seqs) — the
+    paper's static-batching comparison row (Table I; DESIGN §1)."""
 
     name = "static"
 
@@ -50,13 +59,16 @@ class StaticPolicy(Policy):
 
 
 class BatchingMemory(Policy):
-    """Paper Algorithm 1 — memory-constrained dynamic batching.
+    """Paper Algorithm 1 — memory-constrained dynamic batching (DESIGN §2).
 
     L0 <- eta - (theta * sigma_S + mu_S)          (line 1; refreshed periodically)
     b_t <- b_{t-1}
     if N^d > 0 and N^p > 0:
         b_t <- floor((eta - L0) / (E[l_in] + E[l_out]))   (eq. 14)
     b_t <- min(max(b_t, N^d), B_max)
+
+    The L0 refresh uses the rigorous closed form (12) — see `_refresh_L0`
+    and DESIGN §2.3 for why the paper's printed residual is replaced.
     """
 
     name = "memory"
@@ -112,7 +124,7 @@ class BatchingMemory(Policy):
 
 
 class BatchingSLA(Policy):
-    """Paper Algorithm 2 — SLA-constrained noisy binary search.
+    """Paper Algorithm 2 — SLA-constrained noisy binary search (DESIGN §1.2).
 
     Maintains [b_low, b_high]; compares recent mean TBT tau-bar against
     D_SLA +/- eps_D and narrows/recenters the window; emits the midpoint.
@@ -158,7 +170,9 @@ class BatchingSLA(Policy):
 
 
 class CombinedPolicy(Policy):
-    """b* = min(b_mem, b_SLA) — the paper's full method."""
+    """b* = min(b_mem, b_SLA) — the paper's full method (§III-B; DESIGN
+    §1.2). In PD-fusion mode the fused chunk budget is likewise the min of
+    the two policies' budgets."""
 
     name = "combined"
 
@@ -181,8 +195,8 @@ class CombinedPolicy(Policy):
 
 
 def bucketize(b: int, buckets) -> int:
-    """Round b DOWN to the nearest compiled bucket (TPU static shapes);
-    never below the smallest bucket."""
+    """Round b DOWN to the nearest compiled bucket (TPU static shapes,
+    DESIGN §3); never below the smallest bucket."""
     if not buckets:
         return b
     le = [x for x in buckets if x <= b]

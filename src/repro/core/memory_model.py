@@ -1,4 +1,5 @@
-"""Memory model for the scheduler: the paper's CLT chance-constraint math.
+"""Memory model for the scheduler: the paper's CLT chance-constraint math
+(DESIGN §2).
 
 Maps GPU/TPU HBM budget -> token capacity eta, and implements
 

@@ -1,15 +1,17 @@
 """Rolling telemetry the controller consumes each scheduling interval.
 
 Tracks request arrival rate lambda(t), prompt/output length moments
-(EW-windowed), recent decode latency tau-bar (TBT) and recent decode batch
-size b-bar. Pure Python — shared by the real engine and the simulator.
+(EW-windowed), recent decode latency tau-bar (TBT), recent decode batch
+size b-bar, and — in PD-fusion mode — per-lane prefill occupancy and
+TTFT attribution (queueing vs prefill service, DESIGN §6). Pure Python —
+shared by the real engine and the simulator (DESIGN §1).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import math
-from typing import Deque, Optional
+from typing import Deque, Dict, Mapping, Optional
 
 
 @dataclasses.dataclass
@@ -25,6 +27,11 @@ class TelemetrySnapshot:
     arrival_rate: float = 0.0        # lambda(t) req/s
     free_tokens: int = 0             # free KV-pool tokens (blocks*block_size)
     now: float = 0.0
+    # PD fusion (DESIGN §6): recent mean fraction of prefill lanes packed
+    # with work, and EW-mean TTFT split into queueing vs prefill service
+    prefill_lane_occupancy: float = 0.0
+    ttft_queue_s: float = 0.0
+    ttft_prefill_s: float = 0.0
 
 
 class _Welford:
@@ -60,6 +67,13 @@ class Telemetry:
         self.arrivals: Deque[float] = collections.deque(maxlen=4 * window)
         self.prior_mean_in = prior_mean_in
         self.prior_mean_out = prior_mean_out
+        # PD-fusion lane stats (DESIGN §6)
+        self.lane_occ: Deque[float] = collections.deque(maxlen=window)
+        self.lane_tokens: Dict[int, int] = {}     # lane -> prefill tokens packed
+        self.lane_chunks: Dict[int, int] = {}     # lane -> chunks packed
+        self.prefill_tokens_total = 0
+        self.ttft_queue = _Welford(halflife)
+        self.ttft_prefill = _Welford(halflife)
 
     # -- event feeds --------------------------------------------------------
     def on_arrival(self, t: float, prompt_len: int):
@@ -72,6 +86,22 @@ class Telemetry:
     def on_decode_step(self, tbt_ms: float, batch_size: int):
         self.tbt.append(tbt_ms)
         self.batch.append(batch_size)
+
+    def on_prefill_interval(self, lane_tokens: Mapping[int, int],
+                            n_lanes: int):
+        """One PD-fused interval packed `lane_tokens[lane]` prefill tokens
+        into each listed lane (DESIGN §6); n_lanes is the configured total."""
+        self.lane_occ.append(len(lane_tokens) / max(n_lanes, 1))
+        for lane, toks in lane_tokens.items():
+            self.lane_tokens[lane] = self.lane_tokens.get(lane, 0) + toks
+            self.lane_chunks[lane] = self.lane_chunks.get(lane, 0) + 1
+            self.prefill_tokens_total += toks
+
+    def on_first_token(self, queue_s: float, prefill_s: float):
+        """TTFT attribution: time queued before the first prefill chunk vs
+        time being chunk-prefilled until the first token (DESIGN §6)."""
+        self.ttft_queue.update(max(queue_s, 0.0))
+        self.ttft_prefill.update(max(prefill_s, 0.0))
 
     # -- snapshot ------------------------------------------------------------
     def arrival_rate(self, now: float, horizon: float = 10.0) -> float:
@@ -87,9 +117,13 @@ class Telemetry:
         mo, vo = self.len_out.get(self.prior_mean_out, 0.0)
         tbt = sum(self.tbt) / len(self.tbt) if self.tbt else 0.0
         mb = sum(self.batch) / len(self.batch) if self.batch else 0.0
+        occ = sum(self.lane_occ) / len(self.lane_occ) if self.lane_occ else 0.0
+        tq, _ = self.ttft_queue.get()
+        tp, _ = self.ttft_prefill.get()
         return TelemetrySnapshot(
             n_prefill_waiting=n_prefill, n_decode_running=n_decode,
             mean_in=mi, var_in=vi, mean_out=mo, var_out=vo,
             tbt_ms=tbt, mean_batch=mb,
             arrival_rate=self.arrival_rate(now), free_tokens=free_tokens,
-            now=now)
+            now=now, prefill_lane_occupancy=occ,
+            ttft_queue_s=tq, ttft_prefill_s=tp)

@@ -31,6 +31,15 @@ def main():
     ap.add_argument("--pool-tokens", type=int, default=4096)
     ap.add_argument("--max-context", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    # PD fusion (DESIGN §6)
+    ap.add_argument("--chunked", action="store_true",
+                    help="PD-fusion mode (chunked prefill)")
+    ap.add_argument("--lanes", type=int, default=1,
+                    help="concurrent prefill lanes")
+    ap.add_argument("--pack", default="fifo", choices=["fifo", "srf"],
+                    help="lane packer policy")
+    ap.add_argument("--chunk-budget", type=int, default=512,
+                    help="prefill token budget per fused interval")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, args.variant)
@@ -39,7 +48,11 @@ def main():
     params = model.init(jax.random.PRNGKey(args.seed))
     serve = ServeConfig(policy=args.policy, b_max=args.b_max,
                         d_sla_ms=args.sla_ms, max_new_tokens=args.max_new,
-                        kv_pool_tokens=args.pool_tokens)
+                        kv_pool_tokens=args.pool_tokens,
+                        chunked_prefill=args.chunked,
+                        chunk_budget_tokens=args.chunk_budget,
+                        n_prefill_lanes=args.lanes,
+                        prefill_pack=args.pack)
     enc_len = 16 if default_enc_len(cfg) else 0
     eng = Engine(model, params, serve, max_context=args.max_context,
                  buckets=tuple(2 ** i for i in range(0, args.b_max.bit_length())),

@@ -1,10 +1,16 @@
 """Continuous-batching serving engine over a real JAX model.
 
 Runs the same controller stack as the simulator (Telemetry -> Policy ->
-BlockManager) with actual jit-compiled prefill/decode steps and wall-clock
-TBT feedback. Batch sizes are bucketized (TPU/XLA static shapes — DESIGN §3):
-the decode step runs on the smallest compiled bucket >= active requests, with
-inactive rows masked via position -1.
+BlockManager, DESIGN §1) with actual jit-compiled prefill/decode steps and
+wall-clock TBT feedback. Batch sizes are bucketized (TPU/XLA static shapes —
+DESIGN §3): the decode step runs on the smallest compiled bucket >= active
+requests, with inactive rows masked via position -1.
+
+PD fusion (DESIGN §6) runs `n_prefill_lanes` spare physical cache rows past
+the decode buckets; each scheduling interval the controller's chunk budget
+is packed across occupied lanes and same-size lane chunks are batched into
+one jit'd multi-row prefill graph. Finished lanes promote into the compacted
+decode region.
 
 Intended for reduced-config models on CPU (tests, Fig-3-style curves) and as
 the production template for TPU serving (launch/serve.py).
@@ -19,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.config.base import ModelConfig, ServeConfig
 from repro.core.batching import make_policy
+from repro.core.lanes import lane_order, pack_chunks
 from repro.core.memory_model import MemoryModel
 from repro.core.telemetry import Telemetry
 from repro.models.model import Model
@@ -63,6 +70,25 @@ def cache_clear_row(cache: Dict[str, Any], i: int) -> Dict[str, Any]:
     return out
 
 
+def cache_gather(cache: Dict[str, Any], rows) -> Dict[str, Any]:
+    """Gather a (possibly non-contiguous) set of physical rows into a
+    compact sub-cache — the multi-lane prefill batch (DESIGN §6)."""
+    return {k: jnp.take(v, rows, axis=_batch_axis(k))
+            for k, v in cache.items()}
+
+
+def cache_scatter(cache: Dict[str, Any], sub: Dict[str, Any],
+                  rows) -> Dict[str, Any]:
+    """Scatter a gathered sub-cache back into its physical rows."""
+    out = {}
+    for k, v in cache.items():
+        if _batch_axis(k) == 0:
+            out[k] = v.at[rows].set(sub[k])
+        else:
+            out[k] = v.at[:, rows].set(sub[k])
+    return out
+
+
 class Engine:
     def __init__(self, model: Model, params, serve: ServeConfig,
                  max_context: int = 256,
@@ -82,11 +108,12 @@ class Engine:
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
 
-        # +1 spare physical row: the PD-fusion prefilling request lives
-        # outside every decode bucket so masked decode steps can never
-        # touch its (stateful) cache row
-        self.cache = model.init_cache(self.max_slots + 1, max_context,
-                                      enc_len=enc_len,
+        # n_prefill_lanes spare physical rows: PD-fusion prefilling requests
+        # live outside every decode bucket so masked decode steps can never
+        # touch their (stateful) cache rows (DESIGN §6)
+        self.n_lanes = max(1, serve.n_prefill_lanes)
+        self.cache = model.init_cache(self.max_slots + self.n_lanes,
+                                      max_context, enc_len=enc_len,
                                       prefill_chunk=prefill_chunk)
         eta = serve.kv_pool_tokens or self.max_slots * max_context
         self.mem = MemoryModel(self.cfg, hbm_budget_bytes=0,
@@ -98,9 +125,11 @@ class Engine:
 
         self.waiting: List[Request] = []
         self.active: List[Request] = []          # compact: slot i = active[i]
-        # PD fusion: head-of-line request being chunk-prefilled; lives in
-        # the dedicated spare physical row (slot == max_slots)
+        # PD fusion (DESIGN §6): admitted requests being chunk-prefilled.
+        # A request with r.lane >= 0 owns physical row max_slots + r.lane;
+        # the rest queue for a free lane.
         self.prefilling: List[Request] = []
+        self.lanes: List[Optional[Request]] = [None] * self.n_lanes
         self.now0 = time.perf_counter()
         self._next_rid = 0
         self.total_decoded = 0
@@ -109,9 +138,13 @@ class Engine:
         self.decode_steps = 0
         self.batch_trace: List[int] = []
         self.tbt_trace: List[float] = []
+        # per-interval packed prefill tokens (packer audit: sum of lane
+        # chunks each fused interval; each entry <= that interval's budget)
+        self.prefill_tokens_trace: List[int] = []
 
         self._decode_jit = jax.jit(self._decode_fn)
         self._prefill_jit = jax.jit(self._prefill_fn)
+        self._prefill_lanes_jit = jax.jit(self._prefill_lanes_fn)
 
     # -- jit'd steps ----------------------------------------------------------
     def _decode_fn(self, params, tokens, seq_lens, cache):
@@ -119,6 +152,14 @@ class Engine:
 
     def _prefill_fn(self, params, tokens, positions, cache, extras):
         return self.model.prefill(params, tokens, positions, cache, extras)
+
+    def _prefill_lanes_fn(self, params, tokens, positions, cache, rows):
+        """Multi-row lane prefill: gather the lane rows into one batch, run
+        a single prefill graph, scatter the rows back (DESIGN §6). Compiles
+        one graph per (n_rows, chunk_len) shape."""
+        sub = cache_gather(cache, rows)
+        logits, sub = self.model.prefill(params, tokens, positions, sub, None)
+        return logits, cache_scatter(cache, sub, rows)
 
     # -- public API -------------------------------------------------------------
     def submit(self, prompt_tokens: List[int], max_new_tokens: int = 0,
@@ -136,7 +177,11 @@ class Engine:
         return r
 
     def warmup(self):
-        """Compile decode buckets + prefill graph so TBT feedback is clean."""
+        """Compile decode buckets + prefill graphs so TBT feedback is clean.
+
+        Covers every full-chunk shape: the single-row graph plus one
+        multi-row lane graph per group size 2..n_prefill_lanes (tail chunks
+        still compile on first use — one graph per distinct tail length)."""
         for b in self.buckets:
             sub = cache_take(self.cache, 0, b)
             toks = jnp.zeros((b,), jnp.int32)
@@ -147,6 +192,13 @@ class Engine:
         pos = jnp.full((1, self.prefill_chunk), -1, jnp.int32)
         jax.block_until_ready(
             self._prefill_jit(self.params, tt, pos, sub, None))
+        for g in range(2, self.n_lanes + 1):
+            rows = jnp.arange(self.max_slots, self.max_slots + g, dtype=jnp.int32)
+            tt = jnp.zeros((g, self.prefill_chunk), jnp.int32)
+            pos = jnp.full((g, self.prefill_chunk), -1, jnp.int32)
+            logits, _ = self._prefill_lanes_jit(self.params, tt, pos,
+                                                self.cache, rows)
+            jax.block_until_ready(logits)
 
     def _now(self) -> float:
         return time.perf_counter() - self.now0
@@ -187,6 +239,11 @@ class Engine:
             # for both (the paper's adaptive-chunk-size scenario)
             budget = decision.chunk_budget \
                 or self.serve.chunk_budget_tokens
+            if budget <= 0 and self.prefilling and not self.active:
+                # nothing decoding and no token budget: the engine would
+                # spin no-op intervals forever — make minimum progress on
+                # one full chunk instead of livelocking
+                budget = self.prefill_chunk
             chunk_ms = self._advance_prefill(budget)
             if self.active:
                 self._decode_once(extra_ms=chunk_ms)
@@ -194,40 +251,126 @@ class Engine:
             self._decode_once()
         return True
 
-    # -- PD fusion internals ----------------------------------------------------
+    # -- PD fusion internals (DESIGN §6) ---------------------------------------
+    def _fill_lanes(self):
+        """Assign queued prefilling requests to free lanes (sticky: a lane
+        keeps its request until promotion)."""
+        queued = [(None, r) for r in self.prefilling if r.lane < 0]
+        if not queued:
+            return
+        queued = lane_order(self.serve.prefill_pack, queued)
+        for j in range(self.n_lanes):
+            if self.lanes[j] is not None:
+                continue
+            if not queued:
+                break
+            _, r = queued.pop(0)
+            slot = self.max_slots + j
+            self.cache = cache_clear_row(self.cache, slot)
+            r.lane = j
+            r.slot = slot
+            self.lanes[j] = r
+
     def _advance_prefill(self, budget_tokens: int) -> float:
-        """Advance the head-of-line prefilling request by one chunk
-        (<= budget). Returns wall-clock ms spent."""
+        """Advance up to n_prefill_lanes prefilling requests by one chunk
+        each, within the interval's token budget (shared packer:
+        core.lanes.pack_chunks). Returns wall-clock ms."""
         if not self.prefilling or budget_tokens <= 0:
             return 0.0
-        r = self.prefilling[0]
-        slot = self.max_slots          # dedicated spare row
-        if r.prefill_pos == 0 and r.slot != slot:
-            self.cache = cache_clear_row(self.cache, slot)
-            r.slot = slot
-        take = min(budget_tokens, self.prefill_chunk,
-                   r.prompt_len - r.prefill_pos)
-        piece = r.prompt_tokens[r.prefill_pos:r.prefill_pos + take]
-        tt = jnp.array([piece], jnp.int32)
-        pos = jnp.array([list(range(r.prefill_pos,
-                                    r.prefill_pos + take))], jnp.int32)
-        ex = getattr(r, "extras", None) if r.prefill_pos == 0 else None
-        sub = cache_take(self.cache, slot, 1)
-        t0 = time.perf_counter()
-        logits, sub = self._prefill_jit(self.params, tt, pos, sub, ex)
-        logits = jax.block_until_ready(logits)
-        dt_ms = (time.perf_counter() - t0) * 1e3
-        self.cache = cache_put(self.cache, sub, slot)
-        r.prefill_pos += take
-        if r.prefill_pos >= r.prompt_len:
-            self.prefilling.pop(0)
-            # promote: move the finished row into the running region
+        self._fill_lanes()
+        plan = pack_chunks(self.serve.prefill_pack, self.lanes,
+                           budget_tokens, self.prefill_chunk)
+        if not plan:
+            return 0.0
+        for _, r, _ in plan:
+            if r.prefill_start_time < 0:
+                r.prefill_start_time = self._now()
+
+        # batch same-size chunks into one multi-row graph; first chunks
+        # carrying extras (image/audio embeddings differ per request) run
+        # as single-row calls on the existing contiguous path
+        single = [(j, r, t) for j, r, t in plan
+                  if r.prefill_pos == 0 and getattr(r, "extras", None)
+                  is not None]
+        single_lanes = {j for j, _, _ in single}
+        groups: Dict[int, list] = {}
+        for j, r, t in plan:
+            if j in single_lanes:
+                continue
+            groups.setdefault(t, []).append((j, r, t))
+
+        dt_ms = 0.0
+        last_logits: Dict[int, Any] = {}   # lane -> logits of its chunk
+        for j, r, take in single:
+            slot = self.max_slots + j
+            piece = r.prompt_tokens[:take]
+            tt = jnp.array([piece], jnp.int32)
+            pos = jnp.array([list(range(take))], jnp.int32)
+            sub = cache_take(self.cache, slot, 1)
+            t0 = time.perf_counter()
+            logits, sub = self._prefill_jit(self.params, tt, pos, sub,
+                                            r.extras)
+            logits = jax.block_until_ready(logits)
+            dt_ms += (time.perf_counter() - t0) * 1e3
+            self.cache = cache_put(self.cache, sub, slot)
+            last_logits[j] = logits[0]
+        for take, entries in groups.items():
+            if len(entries) == 1:
+                # single row: contiguous slice path (identical graph to the
+                # legacy single-spare-row engine — keeps n_prefill_lanes=1
+                # bit-for-bit)
+                j, r, _ = entries[0]
+                slot = self.max_slots + j
+                piece = r.prompt_tokens[r.prefill_pos:r.prefill_pos + take]
+                tt = jnp.array([piece], jnp.int32)
+                pos = jnp.array([list(range(r.prefill_pos,
+                                            r.prefill_pos + take))], jnp.int32)
+                sub = cache_take(self.cache, slot, 1)
+                t0 = time.perf_counter()
+                logits, sub = self._prefill_jit(self.params, tt, pos, sub,
+                                                None)
+                logits = jax.block_until_ready(logits)
+                dt_ms += (time.perf_counter() - t0) * 1e3
+                self.cache = cache_put(self.cache, sub, slot)
+                last_logits[j] = logits[0]
+                continue
+            rows = jnp.array([self.max_slots + j for j, _, _ in entries],
+                             jnp.int32)
+            tt = jnp.array(
+                [r.prompt_tokens[r.prefill_pos:r.prefill_pos + take]
+                 for _, r, _ in entries], jnp.int32)
+            pos = jnp.array(
+                [list(range(r.prefill_pos, r.prefill_pos + take))
+                 for _, r, _ in entries], jnp.int32)
+            t0 = time.perf_counter()
+            logits, self.cache = self._prefill_lanes_jit(
+                self.params, tt, pos, self.cache, rows)
+            logits = jax.block_until_ready(logits)
+            dt_ms += (time.perf_counter() - t0) * 1e3
+            for i, (j, _, _) in enumerate(entries):
+                last_logits[j] = logits[i]
+
+        self.tel.on_prefill_interval({j: t for j, _, t in plan}, self.n_lanes)
+        self.prefill_tokens_trace.append(sum(t for _, _, t in plan))
+        for _, r, take in plan:
+            r.prefill_pos += take
+        # promote finished lanes (lane-index order: deterministic) into the
+        # compacted decode region
+        for j, r, take in sorted(plan, key=lambda e: e[0]):
+            if r.prefill_pos < r.prompt_len:
+                continue
+            self.prefilling.remove(r)
+            self.lanes[j] = None
             dst = len(self.active)
-            self.cache = cache_copy_row(self.cache, dst, slot)
+            self.cache = cache_copy_row(self.cache, dst, self.max_slots + j)
             r.slot = dst
+            r.lane = -1
             r.state = RequestState.RUNNING
             r.first_token_time = self._now()
-            r.output_tokens.append(int(jnp.argmax(logits[0, take - 1])))
+            self.tel.on_first_token(
+                r.prefill_start_time - r.arrival_time,
+                r.first_token_time - r.prefill_start_time)
+            r.output_tokens.append(int(jnp.argmax(last_logits[j][take - 1])))
             self.active.append(r)
         return dt_ms
 
@@ -278,6 +421,10 @@ class Engine:
         r.state = RequestState.WAITING
         r.output_tokens.clear()
         r.tbt_samples.clear()
+        # recompute: the next serving pass re-attributes TTFT from scratch
+        # (a stale prefill_start_time would count the first life — decode
+        # included — as prefill service)
+        r.prefill_start_time = -1.0
         last = len(self.active) - 1
         if slot != last:
             self.cache = cache_copy_row(self.cache, slot, last)
@@ -338,6 +485,9 @@ class Engine:
     # -- metrics ---------------------------------------------------------------
     def summary(self) -> Dict[str, float]:
         el = self._now()
+        occ = self.tel.lane_occ
+        tq, _ = self.tel.ttft_queue.get()
+        tp, _ = self.tel.ttft_prefill.get()
         return {
             "throughput_tok_s": self.total_decoded / max(el, 1e-9),
             "decode_steps": self.decode_steps,
@@ -347,4 +497,9 @@ class Engine:
             if self.tbt_trace else 0.0,
             "finished": self.total_finished,
             "preemptions": self.preemptions,
+            # PD fusion (DESIGN §6)
+            "prefill_lane_occupancy": (sum(occ) / len(occ)) if occ else 0.0,
+            "prefill_tokens": float(self.tel.prefill_tokens_total),
+            "ttft_queue_s_mean": tq,
+            "ttft_prefill_s_mean": tp,
         }

@@ -1,11 +1,13 @@
 """Block-granular KV pool accounting (vLLM-style allocator).
 
-On TPU the physical cache is a contiguous padded tensor per batch slot
-(DESIGN §3); paging lives at the *allocator* level: this class tracks block
-ownership so the scheduler sees the same free-token signal a paged GPU
-allocator would provide, and admission control + preemption use it. The
-block table per request is maintained (host-side) so the accounting is
-faithful to the paper's vLLM deployment.
+The bottom layer of the controller stack (DESIGN §1). On TPU the physical
+cache is a contiguous padded tensor per batch slot — decode buckets plus
+the PD-fusion prefill lanes (DESIGN §3, §6); paging lives at the
+*allocator* level: this class tracks block ownership so the scheduler sees
+the same free-token signal a paged GPU allocator would provide, and
+admission control + preemption use it. The block table per request is
+maintained (host-side) so the accounting is faithful to the paper's vLLM
+deployment.
 """
 from __future__ import annotations
 

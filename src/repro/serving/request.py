@@ -27,6 +27,8 @@ class Request:
     prefill_pos: int = 0                         # chunked-prefill progress
     output_tokens: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1                               # engine batch slot
+    lane: int = -1                               # PD-fusion prefill lane (DESIGN §6)
+    prefill_start_time: float = -1.0             # first prefill chunk (TTFT attribution)
     first_token_time: float = -1.0
     finish_time: float = -1.0
     tbt_samples: List[float] = dataclasses.field(default_factory=list)

@@ -1,16 +1,19 @@
 """Discrete-event simulator of a continuous-batching serving engine.
 
-Runs the SAME controller stack (Telemetry -> Policy -> BlockManager admission)
-as the real JAX engine, replacing the model step with the CostModel time law
-and pre-sampled output lengths. This is how the paper's GPU-scale tables
-(LLaMA-65B/70B, PanGu-7/38/135B) are reproduced on CPU; the scheduling code
-under test is identical, byte for byte.
+Runs the SAME controller stack (Telemetry -> Policy -> BlockManager
+admission, DESIGN §1) as the real JAX engine, replacing the model step with
+the CostModel time law and pre-sampled output lengths (DESIGN §7). This is
+how the paper's GPU-scale tables (LLaMA-65B/70B, PanGu-7/38/135B) are
+reproduced on CPU; the scheduling code under test is identical, byte for
+byte.
 
 Step semantics mirror vLLM 0.x (the paper's substrate):
   * non-fused mode: a step is EITHER a prefill batch (when the policy admits
     waiting requests and prefill work exists) OR one decode iteration.
-  * PD-fusion mode (chunked prefill): each step packs `chunk_budget` prefill
-    tokens alongside all running decodes.
+  * PD-fusion mode (chunked prefill, DESIGN §6): each step packs
+    `chunk_budget` prefill tokens across up to `n_prefill_lanes` concurrent
+    prefills (the engine's lane semantics: sticky lanes, fifo/srf packer,
+    optional per-lane chunk cap) alongside all running decodes.
 """
 from __future__ import annotations
 
@@ -21,6 +24,7 @@ from typing import Dict, List, Optional
 
 from repro.config.base import ModelConfig, ServeConfig
 from repro.core.batching import BatchDecision, Policy, bucketize, make_policy
+from repro.core.lanes import lane_order, pack_chunks
 from repro.core.memory_model import MemoryModel
 from repro.core.telemetry import Telemetry
 from repro.serving.cost_model import CostModel
@@ -30,7 +34,8 @@ from repro.serving.request import Request, RequestState
 
 @dataclasses.dataclass
 class LengthDist:
-    """Request length sampler: lognormal-ish around the paper's means."""
+    """Request length sampler: lognormal-ish around the paper's workload
+    means (paper §IV experimental setup; DESIGN §7)."""
     mean_in: float
     mean_out: float
     cv_in: float = 0.3          # coefficient of variation
@@ -54,6 +59,7 @@ def _lognorm(mean: float, cv: float):
 
 @dataclasses.dataclass
 class SimResult:
+    """Aggregate run metrics (the paper's Table I/II columns; DESIGN §7)."""
     total_tokens: int = 0
     duration_s: float = 0.0
     finished: int = 0
@@ -62,6 +68,11 @@ class SimResult:
     tbt_ms_mean: float = 0.0
     tbt_ms_p95: float = 0.0
     ttft_p90_s: float = 0.0         # time-to-first-token (queueing + prefill)
+    ttft_mean_s: float = 0.0
+    # TTFT attribution (DESIGN §6): queue wait vs prefill service means
+    ttft_queue_mean_s: float = 0.0
+    ttft_prefill_mean_s: float = 0.0
+    prefill_lane_occupancy: float = 0.0  # mean busy-lane fraction, fused steps
     sla_attainment: float = 0.0     # fraction of decode steps within SLA
     mean_batch: float = 0.0
     batch_trace: List[int] = dataclasses.field(default_factory=list)
@@ -73,14 +84,25 @@ class SimResult:
 
 
 class ServingSimulator:
+    """Discrete-event twin of `serving.engine.Engine` (DESIGN §7).
+
+    `prefill_chunk` mirrors the engine's per-lane chunk cap in PD-fusion
+    mode (0 = uncapped: a lane may take its whole remaining prompt within
+    the interval budget)."""
+
     def __init__(self, cfg: ModelConfig, serve: ServeConfig, cost: CostModel,
                  lengths: LengthDist, seed: int = 0,
-                 policy: Optional[Policy] = None):
+                 policy: Optional[Policy] = None, prefill_chunk: int = 0):
         self.cfg = cfg
         self.serve = serve
         self.cost = cost
         self.lengths = lengths
         self.rng = random.Random(seed)
+        self.prefill_chunk = prefill_chunk
+        self.n_lanes = max(1, serve.n_prefill_lanes)
+        # PD-fusion lanes (DESIGN §6): sticky request-per-lane, same
+        # semantics as the engine's spare physical rows
+        self.lanes: List[Optional[Request]] = [None] * self.n_lanes
 
         pool_bytes = serve.hbm_budget_bytes or cost.kv_pool_bytes()
         self.mem = MemoryModel(cfg, pool_bytes, eps_m=serve.eps_m,
@@ -96,6 +118,9 @@ class ServingSimulator:
 
         self.waiting: List[Request] = []
         self.running: List[Request] = []
+        # fused-mode prefill backlog (admitted, chunk-prefilling; engine's
+        # `prefilling` list)
+        self.pending_prefill: List[Request] = []
         self._all: List[Request] = []
         self.now = 0.0
         self.res = SimResult()
@@ -120,8 +145,12 @@ class ServingSimulator:
     # -- scheduling interval ----------------------------------------------------
     def _snapshot(self):
         arrived = [r for r in self.waiting if r.arrival_time <= self.now]
+        # engine-mirrored N^p: un-admitted arrivals + the fused prefill
+        # backlog (engine counts waiting + prefilling)
         return self.tel.snapshot(
-            now=self.now, n_prefill=len(arrived), n_decode=len(self.running),
+            now=self.now,
+            n_prefill=len(arrived) + len(self.pending_prefill),
+            n_decode=len(self.running),
             free_tokens=self.blocks.free_tokens)
 
     def _admit(self, decision: BatchDecision):
@@ -130,7 +159,9 @@ class ServingSimulator:
             if self.serve.batch_buckets else decision.max_batch
         admitted = []
         for r in list(self.waiting):
-            if len(self.running) + len(admitted) >= cap:
+            # engine-mirrored cap: running + prefill backlog + this batch
+            if len(self.running) + len(self.pending_prefill) \
+                    + len(admitted) >= cap:
                 break
             if r.arrival_time > self.now:
                 break
@@ -163,6 +194,8 @@ class ServingSimulator:
             self.blocks.free(victim.rid)
             victim.state = RequestState.WAITING
             victim.prefill_pos = 0
+            # engine-mirrored: re-attribute TTFT on the recompute pass
+            victim.prefill_start_time = -1.0
             # vLLM recompute: generated tokens are REPLAYED as prefill (they
             # are kept, not regenerated) — context_len stays, only the KV is
             # rebuilt. The re-prefill cost lands in _prefill_step via
@@ -175,12 +208,32 @@ class ServingSimulator:
         # context_len covers recompute-after-preemption (prompt + kept output)
         toks = sum(r.context_len for r in reqs)
         ctx = toks / max(len(reqs), 1)
+        for r in reqs:
+            if r.prefill_start_time < 0:
+                r.prefill_start_time = self.now
         dt = self.cost.tau_step_s(0, 0.0, prefill_tokens=toks, prefill_ctx=ctx)
         self.now += dt
         for r in reqs:
             r.state = RequestState.RUNNING
             r.first_token_time = self.now
+            self.tel.on_first_token(r.prefill_start_time - r.arrival_time,
+                                    self.now - r.prefill_start_time)
             self.running.append(r)
+
+    # -- PD-fusion lane packer (shared with the engine, DESIGN §6) -------------
+    def _fill_lanes(self, pending: List[Request]):
+        queued = [(None, r) for r in pending if r.lane < 0]
+        if not queued:
+            return
+        queued = lane_order(self.serve.prefill_pack, queued)
+        for j in range(self.n_lanes):
+            if self.lanes[j] is not None:
+                continue
+            if not queued:
+                break
+            _, r = queued.pop(0)
+            r.lane = j
+            self.lanes[j] = r
 
     def _decode_step(self, fused_prefill: List[Request], chunk_budget: int):
         b = len(self.running)
@@ -190,13 +243,18 @@ class ServingSimulator:
             self.blocks.allocate(r.rid, r.context_len, 1)
         pf_tokens = 0
         if fused_prefill:
-            budget = chunk_budget
-            for r in fused_prefill:
-                take = min(budget - pf_tokens, r.prompt_len - r.prefill_pos)
-                if take <= 0:
-                    break
+            self._fill_lanes(fused_prefill)
+            plan = pack_chunks(self.serve.prefill_pack, self.lanes,
+                               chunk_budget, self.prefill_chunk)
+            lane_tokens: Dict[int, int] = {}
+            for j, r, take in plan:
+                if r.prefill_start_time < 0:
+                    r.prefill_start_time = self.now
                 r.prefill_pos += take
-                pf_tokens += take
+                lane_tokens[j] = take
+            pf_tokens = sum(lane_tokens.values())
+            if lane_tokens:
+                self.tel.on_prefill_interval(lane_tokens, self.n_lanes)
         dt = self.cost.tau_step_s(b, mean_ctx, prefill_tokens=pf_tokens,
                                   prefill_ctx=mean_ctx)
         self.now += dt
@@ -208,13 +266,20 @@ class ServingSimulator:
             if self.serve.d_sla_ms <= 0 or tbt_ms <= self.serve.d_sla_ms \
                     + self.serve.eps_d_ms:
                 self._sla_ok += 1
-        # finished prefill chunks promote to running
-        for r in list(fused_prefill):
-            if r.prefill_pos >= r.prompt_len:
-                r.state = RequestState.RUNNING
-                r.first_token_time = self.now
-                self.running.append(r)
-                fused_prefill.remove(r)
+        # finished lanes promote to running (lane-index order: deterministic,
+        # matches the engine)
+        for j in range(self.n_lanes):
+            r = self.lanes[j]
+            if r is None or r.prefill_pos < r.prompt_len:
+                continue
+            self.lanes[j] = None
+            r.lane = -1
+            r.state = RequestState.RUNNING
+            r.first_token_time = self.now
+            self.tel.on_first_token(r.prefill_start_time - r.arrival_time,
+                                    self.now - r.prefill_start_time)
+            self.running.append(r)
+            fused_prefill.remove(r)
         # token emission + completion
         self.res.total_tokens += b
         for r in list(self.running):
@@ -232,7 +297,7 @@ class ServingSimulator:
     def run(self, max_steps: int = 200_000) -> SimResult:
         for r in self.waiting:
             self.tel.on_arrival(r.arrival_time, r.prompt_len)
-        pending_prefill: List[Request] = []
+        pending_prefill = self.pending_prefill
         steps = 0
         while (self.waiting or self.running or pending_prefill) \
                 and steps < max_steps:
@@ -248,9 +313,14 @@ class ServingSimulator:
             self._preempt_if_needed()
             if self.serve.chunked_prefill:
                 pending_prefill.extend(admitted)
-                self._decode_step(pending_prefill,
-                                  decision.chunk_budget
-                                  or self.serve.chunk_budget_tokens)
+                budget = decision.chunk_budget \
+                    or self.serve.chunk_budget_tokens
+                if budget <= 0 and pending_prefill and not self.running:
+                    # engine-mirrored livelock guard: no decodes and no
+                    # budget would spin no-op steps forever
+                    budget = self.prefill_chunk \
+                        or pending_prefill[0].prompt_len
+                self._decode_step(pending_prefill, budget)
             else:
                 if admitted:
                     self._prefill_step(admitted)
@@ -261,6 +331,19 @@ class ServingSimulator:
                        for r in self._all if r.first_token_time >= 0)
         if ttfts:
             self.res.ttft_p90_s = ttfts[int(0.9 * (len(ttfts) - 1))]
+            self.res.ttft_mean_s = sum(ttfts) / len(ttfts)
+        served = [r for r in self._all
+                  if r.first_token_time >= 0 and r.prefill_start_time >= 0]
+        if served:
+            self.res.ttft_queue_mean_s = sum(
+                r.prefill_start_time - r.arrival_time for r in served) \
+                / len(served)
+            self.res.ttft_prefill_mean_s = sum(
+                r.first_token_time - r.prefill_start_time for r in served) \
+                / len(served)
+        if self.tel.lane_occ:
+            self.res.prefill_lane_occupancy = \
+                sum(self.tel.lane_occ) / len(self.tel.lane_occ)
         if self._tbts:
             s = sorted(self._tbts)
             self.res.tbt_ms_mean = sum(s) / len(s)

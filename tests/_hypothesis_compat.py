@@ -1,0 +1,112 @@
+"""Property-test shim: real `hypothesis` when installed, else a fallback.
+
+Tier-1 must collect and run on a bare image (ROADMAP "Tier-1 verify"), but
+`hypothesis` is a dev extra that may be absent. When it is, this module
+provides a miniature drop-in for the subset of the API the suite uses
+(`given` / `settings` / `strategies.{floats,integers,booleans,sampled_from,
+tuples,lists}`) backed by deterministic pseudo-random sampling (seeded per
+test, so failures reproduce). It does no shrinking and far less adversarial
+generation than the real library — install `requirements-dev.txt` to get
+full coverage; CI always runs with the real hypothesis.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised implicitly by which branch collects
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import random
+
+    _DEFAULT_EXAMPLES = 30
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _strategies:
+        """Namespace mirroring `hypothesis.strategies` (the used subset)."""
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            lo, hi = float(min_value), float(max_value)
+
+            def draw(rng):
+                # mix uniform draws with the endpoints: boundary values are
+                # where the real library finds most of its bugs
+                r = rng.random()
+                if r < 0.05:
+                    return lo
+                if r < 0.10:
+                    return hi
+                return rng.uniform(lo, hi)
+            return _Strategy(draw)
+
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30, **_kw):
+            lo, hi = int(min_value), int(max_value)
+
+            def draw(rng):
+                r = rng.random()
+                if r < 0.05:
+                    return lo
+                if r < 0.10:
+                    return hi
+                return rng.randint(lo, hi)
+            return _Strategy(draw)
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: rng.choice(seq))
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, **_kw):
+            lo, hi = int(min_size), int(max_size)
+
+            def draw(rng):
+                return [elements.draw(rng) for _ in range(rng.randint(lo, hi))]
+            return _Strategy(draw)
+
+    strategies = _strategies()
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, **_kw):
+        """Accepts (and mostly ignores) the real kwargs; keeps max_examples."""
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+                for _ in range(n):
+                    example = tuple(s.draw(rng) for s in strats)
+                    try:
+                        fn(*example)
+                    except Exception:
+                        print(f"Falsifying example ({fn.__qualname__}): "
+                              f"{example!r}")
+                        raise
+            # zero-arg wrapper: pytest must not mistake the strategy
+            # parameters for fixtures, so do NOT functools.wraps here
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__dict__.update(fn.__dict__)
+            return wrapper
+        return deco

@@ -1,0 +1,77 @@
+"""Docs stay honest: README/DESIGN links resolve, DESIGN section numbers
+match every `DESIGN §N` reference in source docstrings, and the quickstart
+entry points exist. Run standalone or as the CI docs link-check step."""
+import re
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DESIGN = ROOT / "docs" / "DESIGN.md"
+README = ROOT / "README.md"
+
+
+def design_sections():
+    """Set of section numbers DESIGN.md actually defines ('1', '1.2', ...)."""
+    text = DESIGN.read_text()
+    secs = set()
+    for m in re.finditer(r"^#{2,3} §(\d+(?:\.\d+)?)\b", text, re.M):
+        secs.add(m.group(1))
+    return secs
+
+
+def test_design_exists_with_numbered_sections():
+    secs = design_sections()
+    # the sections the issue demands: controller stack, memory model
+    # (eq. 12/14), bucketized static shapes, PD fusion
+    assert {"1", "2", "3", "6"} <= secs, secs
+
+
+def test_source_design_references_resolve():
+    secs = design_sections()
+    missing = []
+    for py in list((ROOT / "src").rglob("*.py")) \
+            + list((ROOT / "tests").glob("*.py")) \
+            + list((ROOT / "benchmarks").glob("*.py")):
+        for m in re.finditer(r"DESIGN §(\d+(?:\.\d+)?)", py.read_text()):
+            if m.group(1) not in secs:
+                missing.append((str(py.relative_to(ROOT)), m.group(1)))
+    assert not missing, f"dangling DESIGN § references: {missing}"
+
+
+def _md_links(path: Path):
+    text = path.read_text()
+    # strip fenced code blocks: links inside examples aren't navigation
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    return [m.group(1) for m in re.finditer(r"\]\(([^)#]+)(?:#[^)]*)?\)", text)]
+
+
+def test_markdown_links_resolve():
+    broken = []
+    for md in (README, DESIGN):
+        for target in _md_links(md):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            if not (md.parent / target).exists():
+                broken.append((md.name, target))
+    assert not broken, f"broken markdown links: {broken}"
+
+
+def test_readme_referenced_paths_exist():
+    text = README.read_text()
+    missing = []
+    for m in re.finditer(r"`([\w\-/\.]+\.(?:py|md|txt))`", text):
+        if not (ROOT / m.group(1)).exists():
+            missing.append(m.group(1))
+    # quickstart commands name real files too
+    for m in re.finditer(r"python ([\w\-/\.]+\.py)", text):
+        if not (ROOT / m.group(1)).exists():
+            missing.append(m.group(1))
+    assert not missing, f"README references missing files: {missing}"
+
+
+def test_design_referenced_paths_exist():
+    text = DESIGN.read_text()
+    missing = []
+    for m in re.finditer(r"`([\w\-/\.]+\.(?:py|md|txt))`", text):
+        if not (ROOT / m.group(1)).exists():
+            missing.append(m.group(1))
+    assert not missing, f"DESIGN references missing files: {missing}"

@@ -1,5 +1,5 @@
 """BlockManager allocator invariants (unit + stateful property tests)."""
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.serving.kv_cache import BlockManager
 

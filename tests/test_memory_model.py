@@ -1,7 +1,7 @@
 """The CLT chance constraint (eqs. 8-14) against Monte-Carlo ground truth."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.config.registry import get_config
 from repro.core.memory_model import MemoryModel
