@@ -233,6 +233,12 @@ class ServeConfig:
     alpha: int = 16                # Alg 2 window-width control α
     delta: int = 4                 # Alg 2 anti-noise relaxation δ
     block_size: int = 16           # KV allocator block granularity (tokens)
+    # physically paged KV cache (DESIGN §9): K/V live in shared
+    # (layers, num_blocks, block_size, KV, hd) pools indexed by the
+    # BlockManager's per-request block tables; lane promotion, finish
+    # compaction and eviction become O(1) table edits. False keeps the
+    # legacy contiguous per-slot cache (n_prefill_lanes=1 bit-for-bit).
+    paged_kv: bool = False
     kv_pool_tokens: int = 0        # η; 0 => derived from memory budget
     hbm_budget_bytes: int = 0      # M_max source; 0 => engine-provided
     scheduling_interval: int = 1   # controller cadence (decode steps)

@@ -107,6 +107,12 @@ class MemoryModel:
         tokens = self.hbm_budget_bytes // self._bpt
         return (tokens // self.block_size) * self.block_size
 
+    @property
+    def num_blocks(self) -> int:
+        """Physical pool blocks for the paged KV cache: the allocator's
+        block count IS the pool's leading dimension (DESIGN §9)."""
+        return self.eta // self.block_size
+
     def max_requests_state_only(self) -> int:
         """SSM-style cap: requests whose state fits the budget."""
         per = self.fixed_bytes_per_request()

@@ -1,10 +1,18 @@
-"""Flash-decode GQA attention Pallas kernel (the serving hot spot).
+"""Flash-decode GQA attention Pallas kernels (the serving hot spot).
 
-One new query token per sequence against a (possibly ring-buffer) KV cache.
-Grid = (batch, kv_head, kv_blocks); the kv-block axis is innermost and
-accumulates an online softmax in VMEM scratch. Masking is position-based
-(absolute positions per cache slot, -1 = empty), identical to the model's
-semantics — so ring buffers / sliding windows need no extra code.
+One new query token per sequence against the KV cache, in two layouts:
+
+* contiguous (`decode_attention_kernel`): k/v are per-slot (B, S, KV, hd)
+  rows; grid = (batch, kv_head, kv_blocks) over the contiguous S axis.
+* paged (`paged_decode_attention_kernel`, DESIGN §9): k/v live in shared
+  (num_blocks, block_size, KV, hd) pools and the kv-block grid axis walks
+  the per-request block table instead of a contiguous row — the table is a
+  scalar-prefetch operand so the BlockSpec index maps can chase it.
+
+Both accumulate an online softmax in VMEM scratch. Masking is
+position-based (absolute positions per cache slot, -1 = empty), identical
+to the model's semantics — ring buffers / sliding windows / ragged paged
+tails need no extra code.
 
 TPU notes: tiles are MXU-friendly when G (= q_heads/kv_heads) and head_dim
 are multiples of 8/128; the reduced test shapes run under interpret=True.
@@ -22,28 +30,21 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(qpos_ref, q_ref, k_ref, v_ref, kpos_ref, o_ref,
-            m_ref, l_ref, acc_ref, *, window: int, block_s: int):
-    s = pl.program_id(2)
-    ns = pl.num_programs(2)
+def _flash_accumulate(s, ns, q, k, v, mask, o_ref, m_ref, l_ref, acc_ref):
+    """One kv-tile of the online-softmax accumulate, shared by the
+    contiguous and paged decode kernels (which differ only in how the tile
+    is addressed and masked).
 
+    q: (G, hd) fp32; k/v: (BS, hd) fp32; mask: (BS,) bool. Initializes the
+    VMEM scratch on the first tile and writes o_ref on the last."""
     @pl.when(s == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)                  # (G, hd)
-    k = k_ref[0, :, 0].astype(jnp.float32)               # (BS, hd)
-    v = v_ref[0, :, 0].astype(jnp.float32)               # (BS, hd)
-    kpos = kpos_ref[0]                                   # (BS,)
-    qpos = qpos_ref[0, 0]                                # scalar
-
     hd = q.shape[-1]
     scores = jnp.dot(q, k.T) / math.sqrt(hd)             # (G, BS)
-    mask = (kpos >= 0) & (kpos <= qpos)
-    if window:
-        mask = mask & (kpos > qpos - window)
     scores = jnp.where(mask[None, :], scores, NEG_INF)
 
     m_prev = m_ref[...]                                  # (G, 1)
@@ -60,6 +61,23 @@ def _kernel(qpos_ref, q_ref, k_ref, v_ref, kpos_ref, o_ref,
     def _done():
         o_ref[0, 0] = (acc_ref[...] /
                        jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _kernel(qpos_ref, q_ref, k_ref, v_ref, kpos_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, window: int, block_s: int):
+    s = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)               # (BS, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)               # (BS, hd)
+    kpos = kpos_ref[0]                                   # (BS,)
+    qpos = qpos_ref[0, 0]                                # scalar
+
+    mask = (kpos >= 0) & (kpos <= qpos)
+    if window:
+        mask = mask & (kpos > qpos - window)
+    _flash_accumulate(s, ns, q, k, v, mask, o_ref, m_ref, l_ref, acc_ref)
 
 
 def decode_attention_kernel(q, k, v, q_pos, k_pos, *, window: int = 0,
@@ -95,4 +113,75 @@ def decode_attention_kernel(q, k, v, q_pos, k_pos, *, window: int = 0,
         ],
         interpret=interpret,
     )(qpos2, qr, k, v, k_pos.astype(jnp.int32))
+    return out.reshape(B, H, hd)
+
+
+def _paged_kernel(tbl_ref, qpos_ref, q_ref, k_ref, v_ref, kpos_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, window: int):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)               # (BS, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)               # (BS, hd)
+    kpos = kpos_ref[0]                                   # (BS,)
+    qpos = qpos_ref[0, 0]                                # scalar
+
+    # unallocated table slots (-1) were clamped to physical block 0 by the
+    # index map; mask the whole tile so block 0's real tenant is invisible
+    mask = (kpos >= 0) & (kpos <= qpos) & (tbl_ref[b, s] >= 0)
+    if window:
+        mask = mask & (kpos > qpos - window)
+    _flash_accumulate(s, ns, q, k, v, mask, o_ref, m_ref, l_ref, acc_ref)
+
+
+def paged_decode_attention_kernel(q, k_pool, v_pool, q_pos, kpos_pool,
+                                  tables, *, window: int = 0,
+                                  interpret: bool = True):
+    """Paged flash decode (DESIGN §9).
+
+    q: (B, H, hd); k_pool/v_pool: (NB, bs, KV, hd) shared physical pools;
+    q_pos: (B,); kpos_pool: (NB, bs) absolute positions (-1 = empty);
+    tables: (B, MB) physical block ids per request (-1 = unallocated).
+
+    Grid = (batch, kv_head, table_slot): the innermost axis walks the block
+    TABLE, not physical memory — `tables` rides in as a scalar-prefetch
+    operand so the k/v/kpos BlockSpec index maps resolve tables[b, s] to the
+    physical block to stream. Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    NB, bs, KV, _ = k_pool.shape
+    MB = tables.shape[1]
+    G = H // KV
+    qr = q.reshape(B, KV, G, hd)
+    qpos2 = q_pos.reshape(B, 1).astype(jnp.int32)
+    tbl = tables.astype(jnp.int32)
+
+    def pool_map(b, h, s, t):
+        return (jnp.maximum(t[b, s], 0), 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, MB),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, s, t: (b, 0)),             # qpos
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, s, t: (b, h, 0, 0)),  # q
+            pl.BlockSpec((1, bs, 1, hd), pool_map),                      # k
+            pl.BlockSpec((1, bs, 1, hd), pool_map),                      # v
+            pl.BlockSpec((1, bs),
+                         lambda b, h, s, t: (jnp.maximum(t[b, s], 0), 0)),  # kpos
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, s, t: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),   # running max m
+            pltpu.VMEM((G, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((G, hd), jnp.float32),  # weighted-value accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, window=window),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(tbl, qpos2, qr, k_pool, v_pool, kpos_pool.astype(jnp.int32))
     return out.reshape(B, H, hd)

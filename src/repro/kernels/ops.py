@@ -11,7 +11,8 @@ import functools
 import jax
 
 from repro.kernels import ref
-from repro.kernels.decode_attention import decode_attention_kernel
+from repro.kernels.decode_attention import (decode_attention_kernel,
+                                            paged_decode_attention_kernel)
 from repro.kernels.flash_attention import flash_attention_kernel
 from repro.kernels.rglru_scan import rglru_scan_kernel
 from repro.kernels.rmsnorm import rmsnorm_kernel
@@ -29,6 +30,18 @@ def decode_attention(q, k, v, q_pos, k_pos, *, window: int = 0,
         return ref.decode_attention_ref(q, k, v, q_pos, k_pos, window=window)
     return decode_attention_kernel(q, k, v, q_pos, k_pos, window=window,
                                    block_s=block_s, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("window", "use_kernel"))
+def paged_decode_attention(q, k_pool, v_pool, q_pos, kpos_pool, tables, *,
+                           window: int = 0, use_kernel: bool = True):
+    """Flash decode through the paged KV pools + block tables (DESIGN §9)."""
+    if not use_kernel:
+        return ref.paged_decode_attention_ref(q, k_pool, v_pool, q_pos,
+                                              kpos_pool, tables, window=window)
+    return paged_decode_attention_kernel(q, k_pool, v_pool, q_pos, kpos_pool,
+                                         tables, window=window,
+                                         interpret=not _on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=("window", "causal", "use_kernel",

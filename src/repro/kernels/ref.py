@@ -26,6 +26,40 @@ def decode_attention_ref(q, k, v, q_pos, k_pos, *, window: int = 0):
     return out.reshape(B, H, hd).astype(q.dtype)
 
 
+def paged_view(pool_k, pool_v, pool_pos, tables):
+    """Gather a per-request contiguous (B, MB*bs) view of the paged pools
+    (DESIGN §9) — the canonical block-table gather, shared by the paged
+    decode oracle below and `models.layers.paged_view` (the production
+    non-kernel path), so the two can never diverge.
+
+    Logical block j of request b sits at view indices [j*bs, (j+1)*bs), so
+    a token at absolute position p lands at view index p — the same index
+    it has in a non-ring contiguous cache row, which keeps the paged and
+    contiguous layouts bitwise comparable. Unallocated table entries (-1)
+    read as empty slots (K/V = 0, pos = -1)."""
+    NB, bs = pool_k.shape[:2]
+    B, MB = tables.shape
+    base = jnp.where(tables >= 0, tables * bs, NB * bs)        # (B, MB)
+    idx = (base[:, :, None] + jnp.arange(bs)[None, None, :]).reshape(B, MB * bs)
+    kf = pool_k.reshape((NB * bs,) + pool_k.shape[2:])
+    vf = pool_v.reshape((NB * bs,) + pool_v.shape[2:])
+    pf = pool_pos.reshape(NB * bs)
+    k = kf.at[idx].get(mode="fill", fill_value=0)
+    v = vf.at[idx].get(mode="fill", fill_value=0)
+    kpos = pf.at[idx].get(mode="fill", fill_value=-1)
+    return k, v, kpos
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, q_pos, kpos_pool, tables,
+                               *, window: int = 0):
+    """Gather-then-attend oracle for the paged kernel (DESIGN §9).
+
+    q: (B, H, hd); k/v_pool: (NB, bs, KV, hd); q_pos: (B,);
+    kpos_pool: (NB, bs); tables: (B, MB), -1 = unallocated."""
+    k, v, kpos = paged_view(k_pool, v_pool, kpos_pool, tables)
+    return decode_attention_ref(q, k, v, q_pos, kpos, window=window)
+
+
 def flash_attention_ref(q, k, v, q_pos, k_pos, *, window: int = 0,
                         causal: bool = True):
     """q: (B, Tq, H, hd); k/v: (B, Tk, KV, hd); q_pos: (B,Tq); k_pos: (B,Tk)."""

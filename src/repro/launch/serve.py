@@ -40,6 +40,9 @@ def main():
                     help="lane packer policy")
     ap.add_argument("--chunk-budget", type=int, default=512,
                     help="prefill token budget per fused interval")
+    # paged KV cache (DESIGN §9)
+    ap.add_argument("--paged", action="store_true",
+                    help="physically paged KV cache (block-table pools)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, args.variant)
@@ -52,7 +55,8 @@ def main():
                         chunked_prefill=args.chunked,
                         chunk_budget_tokens=args.chunk_budget,
                         n_prefill_lanes=args.lanes,
-                        prefill_pack=args.pack)
+                        prefill_pack=args.pack,
+                        paged_kv=args.paged)
     enc_len = 16 if default_enc_len(cfg) else 0
     eng = Engine(model, params, serve, max_context=args.max_context,
                  buckets=tuple(2 ** i for i in range(0, args.b_max.bit_length())),

@@ -132,6 +132,23 @@ def _attn_block_cached(p, x, positions, ck, cv, cpos, cfg, window):
     return x, ck, cv, cpos
 
 
+def _attn_block_paged(p, x, positions, ck, cv, cpos, tables, cfg, window):
+    """Paged twin of `_attn_block_cached`: K/V go through the block-table
+    indexed physical pools instead of a per-slot contiguous row (DESIGN §9)."""
+    h = L.rms_norm(x, p["ln1"], cfg.rms_eps)
+    a, ck, cv, cpos = L.self_attention_paged(
+        p["attn"], h, positions, ck, cv, cpos, tables, cfg, window=window)
+    x = x + a
+    h = L.rms_norm(x, p["ln2"], cfg.rms_eps)
+    if "moe" in p:
+        y, _ = L.moe_apply(p["moe"], h, cfg,
+                           no_drop=cfg.moe.inference_no_drop)
+        x = x + y
+    else:
+        x = x + L.mlp(p["mlp"], h)
+    return x, ck, cv, cpos
+
+
 def _cross_block(p, x, kv_k, kv_v, k_valid, cfg, gated):
     h = L.rms_norm(x, p["ln1"], cfg.rms_eps)
     x = x + L.cross_attention(p["attn"], h, kv_k, kv_v, k_valid, cfg, gated=gated)
@@ -447,6 +464,55 @@ def init_cache(cfg: ModelConfig, batch: int, max_context: int,
     return c
 
 
+def init_paged_cache(cfg: ModelConfig, n_slots: int, num_blocks: int,
+                     block_size: int, dtype=None, enc_len: int = 0) -> Cache:
+    """Physically paged serving cache (DESIGN §9).
+
+    Attention K/V live in (layers, num_blocks, block_size, KV, hd) pools
+    shared by every request and indexed through per-request block tables
+    (the BlockManager's tables ARE the storage map); `pos` is the pool-wide
+    (num_blocks, block_size) absolute-position map (-1 = empty slot).
+    Constant-size per-request state (SSM conv/ssm, RG-LRU conv/rec,
+    cross-KV) stays per-slot with `n_slots` rows, pinned to a request for
+    its whole life so lane promotion / eviction never copy it."""
+    dt = cfg_dtype(cfg, dtype)
+    hd = cfg.resolved_head_dim
+    KV = cfg.num_kv_heads
+    fam = cfg.family
+    c: Cache = {}
+    if fam in (ArchFamily.DENSE, ArchFamily.MOE, ArchFamily.VLM,
+               ArchFamily.ENCDEC):
+        Ldec = cfg.num_layers
+        c["k"] = jnp.zeros((Ldec, num_blocks, block_size, KV, hd), dt)
+        c["v"] = jnp.zeros((Ldec, num_blocks, block_size, KV, hd), dt)
+        c["pos"] = jnp.full((num_blocks, block_size), -1, jnp.int32)
+    if fam == ArchFamily.VLM:
+        c["cross_k"] = jnp.zeros(
+            (cfg.num_cross_layers, n_slots, enc_len, KV, hd), dt)
+        c["cross_v"] = jnp.zeros_like(c["cross_k"])
+    if fam == ArchFamily.ENCDEC:
+        c["cross_k"] = jnp.zeros((cfg.num_layers, n_slots, enc_len, KV, hd), dt)
+        c["cross_v"] = jnp.zeros_like(c["cross_k"])
+    if fam == ArchFamily.SSM:
+        d_in, H, P, N = S_dims_of(cfg)
+        conv_ch = d_in + 2 * N
+        c["conv"] = jnp.zeros(
+            (cfg.num_layers, n_slots, cfg.ssm.conv_width - 1, conv_ch), dt)
+        c["ssm"] = jnp.zeros((cfg.num_layers, n_slots, H, P, N), jnp.float32)
+    if fam == ArchFamily.HYBRID:
+        kinds = cfg.layer_kinds()
+        n_rec = sum(1 for k in kinds if k == "recurrent")
+        n_att = len(kinds) - n_rec
+        w = cfg.rglru.lru_width or cfg.d_model
+        c["k"] = jnp.zeros((n_att, num_blocks, block_size, KV, hd), dt)
+        c["v"] = jnp.zeros((n_att, num_blocks, block_size, KV, hd), dt)
+        c["pos"] = jnp.full((num_blocks, block_size), -1, jnp.int32)
+        c["conv"] = jnp.zeros(
+            (n_rec, n_slots, cfg.rglru.conv_width - 1, w), dt)
+        c["rec"] = jnp.zeros((n_rec, n_slots, w), jnp.float32)
+    return c
+
+
 def S_dims_of(cfg):
     return S.ssm_dims(cfg)
 
@@ -465,13 +531,17 @@ def cache_bytes(cfg: ModelConfig, batch: int, max_context: int,
 def forward_cached(p: Params, tokens, positions, cache: Cache,
                    cfg: ModelConfig, *, decode: bool,
                    extras: Optional[Dict[str, jnp.ndarray]] = None,
-                   last_only: bool = False) -> Tuple[jnp.ndarray, Cache]:
+                   last_only: bool = False,
+                   tables=None) -> Tuple[jnp.ndarray, Cache]:
     """tokens: (B, T) int32; positions: (B, T) absolute, -1 for padding.
 
     Returns (logits (B, T, V) fp32, updated cache). For SSM/recurrent layers
     `decode=True` selects the O(1) step (requires T == 1).
     last_only: compute the vocab projection for the final position only
     (production serving path — avoids materializing (B, T, V); §Perf iter A).
+    tables: optional (B, MB) per-request physical block tables; when given,
+    the cache's k/v/pos are the paged pools of `init_paged_cache` and all
+    attention layers read/write through the tables (DESIGN §9).
     """
     extras = extras or {}
     x = p["embed"][tokens]
@@ -481,7 +551,8 @@ def forward_cached(p: Params, tokens, positions, cache: Cache,
 
     if fam in (ArchFamily.DENSE, ArchFamily.MOE):
         x, new_cache = _attn_stack_cached(
-            p["layers"], x, positions, cache, cfg, win, new_cache)
+            p["layers"], x, positions, cache, cfg, win, new_cache,
+            tables=tables)
 
     elif fam == ArchFamily.SSM:
         def body(carry, lp):
@@ -496,7 +567,8 @@ def forward_cached(p: Params, tokens, positions, cache: Cache,
         new_cache["conv"], new_cache["ssm"] = conv_n, ssm_n
 
     elif fam == ArchFamily.HYBRID:
-        x, new_cache = _hybrid_cached(p, x, positions, cache, cfg, decode)
+        x, new_cache = _hybrid_cached(p, x, positions, cache, cfg, decode,
+                                      tables=tables)
 
     elif fam == ArchFamily.VLM:
         if "images" in extras:  # prefill: compute cross KV once
@@ -504,7 +576,8 @@ def forward_cached(p: Params, tokens, positions, cache: Cache,
                 lambda cp: L.cross_kv(cp["attn"], extras["images"], cfg))(
                 p["cross_layers"])
             new_cache["cross_k"], new_cache["cross_v"] = kv_k, kv_v
-        x, new_cache = _vlm_cached(p, x, positions, new_cache, cfg)
+        x, new_cache = _vlm_cached(p, x, positions, new_cache, cfg,
+                                   tables=tables)
 
     elif fam == ArchFamily.ENCDEC:
         if "enc_frames" in extras:  # prefill: run encoder, fill cross KV
@@ -513,7 +586,8 @@ def forward_cached(p: Params, tokens, positions, cache: Cache,
                 lambda cp: L.cross_kv(cp["attn"], enc_out, cfg))(
                 p["dec_cross"])
             new_cache["cross_k"], new_cache["cross_v"] = kv_k, kv_v
-        x, new_cache = _encdec_cached(p, x, positions, new_cache, cfg)
+        x, new_cache = _encdec_cached(p, x, positions, new_cache, cfg,
+                                      tables=tables)
     else:
         raise ValueError(fam)
 
@@ -522,13 +596,15 @@ def forward_cached(p: Params, tokens, positions, cache: Cache,
     return logits_head(p, x, cfg), new_cache
 
 
-def _attn_stack_cached(stacked, x, positions, cache, cfg, win, new_cache):
+def _attn_stack_cached(stacked, x, positions, cache, cfg, win, new_cache,
+                       tables=None):
     """Layer loop for the cached (serving) path.
 
     Uses fori_loop with dynamic_update_index on a loop-CARRIED cache rather
     than scan xs/ys: scan rebuilds the stacked (L,B,S,KV,hd) cache as fresh
     ys output (2-3x full-cache temp traffic per step); a while-loop carry
-    lets XLA update the (donated) buffer in place (§Perf iteration E)."""
+    lets XLA update the (donated) buffer in place (§Perf iteration E).
+    With `tables` the per-layer k/v are the paged pools (DESIGN §9)."""
     cpos0 = cache["pos"]
     L = cache["k"].shape[0]
 
@@ -539,8 +615,12 @@ def _attn_stack_cached(stacked, x, positions, cache, cfg, win, new_cache):
             stacked)
         ck = jax.lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
         cv = jax.lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
-        h, ck, cv, cpos = _attn_block_cached(
-            lp, h, positions, ck, cv, cpos0, cfg, win)
+        if tables is None:
+            h, ck, cv, cpos = _attn_block_cached(
+                lp, h, positions, ck, cv, cpos0, cfg, win)
+        else:
+            h, ck, cv, cpos = _attn_block_paged(
+                lp, h, positions, ck, cv, cpos0, tables, cfg, win)
         k_all = jax.lax.dynamic_update_index_in_dim(k_all, ck, i, 0)
         v_all = jax.lax.dynamic_update_index_in_dim(v_all, cv, i, 0)
         return (h, k_all, v_all, cpos)
@@ -551,11 +631,12 @@ def _attn_stack_cached(stacked, x, positions, cache, cfg, win, new_cache):
     return x, new_cache
 
 
-def _hybrid_cached(p, x, positions, cache, cfg, decode):
+def _hybrid_cached(p, x, positions, cache, cfg, decode, tables=None):
     """fori_loop over the heterogeneous layer pattern with in-place cache
     carry (§Perf iter E). Static index maps translate the flat layer index
     into the recurrent-stack / attention-stack positions; lax.cond picks
-    the branch (both return the full same-shape carry)."""
+    the branch (both return the full same-shape carry). With `tables` the
+    attention branch goes through the paged pools (DESIGN §9)."""
     import numpy as np
     kinds = cfg.layer_kinds()
     win = cfg.rglru.window_size
@@ -577,8 +658,12 @@ def _hybrid_cached(p, x, positions, cache, cfg, decode):
             one = take(p["att_layers"], j)
             ck = jax.lax.dynamic_index_in_dim(k_all, j, 0, keepdims=False)
             cv = jax.lax.dynamic_index_in_dim(v_all, j, 0, keepdims=False)
-            h, ck, cv, cpos = _attn_block_cached(
-                one, h, positions, ck, cv, cpos0, cfg, win)
+            if tables is None:
+                h, ck, cv, cpos = _attn_block_cached(
+                    one, h, positions, ck, cv, cpos0, cfg, win)
+            else:
+                h, ck, cv, cpos = _attn_block_paged(
+                    one, h, positions, ck, cv, cpos0, tables, cfg, win)
             k_all = jax.lax.dynamic_update_index_in_dim(k_all, ck, j, 0)
             v_all = jax.lax.dynamic_update_index_in_dim(v_all, cv, j, 0)
             return (h, k_all, v_all, cpos, conv_all, rec_all)
@@ -610,9 +695,10 @@ def _hybrid_cached(p, x, positions, cache, cfg, decode):
     return x, new_cache
 
 
-def _vlm_cached(p, x, positions, cache, cfg):
+def _vlm_cached(p, x, positions, cache, cfg, tables=None):
     """fori_loop with in-place cache carry (§Perf iter E); a cross-attn
-    layer fires after every `per` self layers via lax.cond."""
+    layer fires after every `per` self layers via lax.cond. With `tables`
+    self-attention goes through the paged pools (DESIGN §9)."""
     n_cross = cfg.num_cross_layers
     per = cfg.num_layers // n_cross
     cpos0 = cache["pos"]
@@ -625,8 +711,12 @@ def _vlm_cached(p, x, positions, cache, cfg):
             p["layers"])
         ck = jax.lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
         cv = jax.lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
-        h, ck, cv, cpos = _attn_block_cached(
-            lp, h, positions, ck, cv, cpos0, cfg, 0)
+        if tables is None:
+            h, ck, cv, cpos = _attn_block_cached(
+                lp, h, positions, ck, cv, cpos0, cfg, 0)
+        else:
+            h, ck, cv, cpos = _attn_block_paged(
+                lp, h, positions, ck, cv, cpos0, tables, cfg, 0)
         k_all = jax.lax.dynamic_update_index_in_dim(k_all, ck, i, 0)
         v_all = jax.lax.dynamic_update_index_in_dim(v_all, cv, i, 0)
 
@@ -652,8 +742,10 @@ def _vlm_cached(p, x, positions, cache, cfg):
     return x, cache
 
 
-def _encdec_cached(p, x, positions, cache, cfg):
-    """fori_loop with in-place self-KV cache carry (§Perf iter E)."""
+def _encdec_cached(p, x, positions, cache, cfg, tables=None):
+    """fori_loop with in-place self-KV cache carry (§Perf iter E); with
+    `tables` decoder self-attention goes through the paged pools
+    (DESIGN §9)."""
     cpos0 = cache["pos"]
 
     def body(i, carry):
@@ -668,8 +760,12 @@ def _encdec_cached(p, x, positions, cache, cfg):
                                           keepdims=False)
         xv = jax.lax.dynamic_index_in_dim(cache["cross_v"], i, 0,
                                           keepdims=False)
-        h, ck, cv, cpos = _attn_block_cached(
-            dec_p, h, positions, ck, cv, cpos0, cfg, 0)
+        if tables is None:
+            h, ck, cv, cpos = _attn_block_cached(
+                dec_p, h, positions, ck, cv, cpos0, cfg, 0)
+        else:
+            h, ck, cv, cpos = _attn_block_paged(
+                dec_p, h, positions, ck, cv, cpos0, tables, cfg, 0)
         h = _cross_block(cross_p, h, xk, xv, None, cfg, gated=False)
         k_all = jax.lax.dynamic_update_index_in_dim(k_all, ck, i, 0)
         v_all = jax.lax.dynamic_update_index_in_dim(v_all, cv, i, 0)

@@ -180,6 +180,64 @@ def self_attention_cached(p, x, positions, cache_k, cache_v, cache_pos,
     return out @ p["wo"], cache_k, cache_v, cache_pos
 
 
+def _pool_write(pool, flat_slots, val):
+    """Scatter per-token values into a flattened paged pool (DESIGN §9).
+
+    pool: (NB, bs, ...); flat_slots: (B, T) flat indices into NB*bs, with
+    out-of-bounds (NB*bs) marking padding/unallocated tokens (dropped)."""
+    NB, bs = pool.shape[:2]
+    flat = pool.reshape((NB * bs,) + pool.shape[2:])
+    return flat.at[flat_slots].set(val, mode="drop").reshape(pool.shape)
+
+
+def paged_view(pool_k, pool_v, pool_pos, tables):
+    """Gather a per-request contiguous (B, MB*bs) view of the paged pools
+    (DESIGN §9). Delegates to the canonical block-table gather in
+    `kernels.ref` so the production path and the kernel oracle can never
+    diverge on layout semantics."""
+    from repro.kernels.ref import paged_view as _paged_view
+    return _paged_view(pool_k, pool_v, pool_pos, tables)
+
+
+def self_attention_paged(p, x, positions, pool_k, pool_v, pool_pos, tables,
+                         cfg: ModelConfig, *, window: int = 0):
+    """Self-attention through the physically paged KV pool (DESIGN §9).
+
+    x: (B, T, d) new tokens at absolute `positions` (B, T); pool_k/v:
+    (NB, bs, KV, hd) shared physical pools; pool_pos: (NB, bs) absolute
+    positions (-1 = empty); tables: (B, MB) per-request physical block ids
+    (-1 = unallocated). A token at position p is written to block
+    tables[b, p // bs], offset p % bs; padding (p < 0) and unallocated
+    blocks drop. Returns (out, new_pool_k, new_pool_v, new_pool_pos).
+    """
+    B, T, _ = x.shape
+    NB, bs = pool_k.shape[:2]
+    MB = tables.shape[1]
+    q, k, v = attention_qkv(p, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    blk = jnp.clip(positions // bs, 0, MB - 1)
+    phys = jnp.take_along_axis(tables, blk, axis=1)            # (B, T)
+    ok = (positions >= 0) & (phys >= 0)
+    flat = jnp.where(ok, phys * bs + positions % bs, NB * bs)
+    pool_k = _pool_write(pool_k, flat, k)
+    pool_v = _pool_write(pool_v, flat, v)
+    pool_pos = _pool_write(pool_pos, flat, positions)
+    if T == 1 and use_pallas():
+        # paged flash-decode Pallas kernel: the kv-block grid axis walks the
+        # block table (kernels/decode_attention.py, DESIGN §9)
+        from repro.kernels import ops
+        out = ops.paged_decode_attention(q[:, 0], pool_k, pool_v,
+                                         positions[:, 0], pool_pos, tables,
+                                         window=window)
+        out = out.reshape(B, 1, -1)
+    else:
+        kview, vview, kpos = paged_view(pool_k, pool_v, pool_pos, tables)
+        out = attend(q, kview, vview, positions, kpos,
+                     window=window, causal=True)
+    return out @ p["wo"], pool_k, pool_v, pool_pos
+
+
 def cross_attention(p, x, kv_k, kv_v, k_valid, cfg: ModelConfig, *,
                     gated: bool = False):
     """Cross-attention to fixed encoder/image keys (precomputed, no RoPE)."""

@@ -91,6 +91,32 @@ class Model:
         return B.init_cache(self.cfg, batch, max_context, self.dtype,
                             enc_len=enc_len, chunk=prefill_chunk)
 
+    def init_paged_cache(self, n_slots: int, num_blocks: int,
+                         block_size: int, enc_len: int = 0):
+        """Physically paged serving cache: block pools + per-slot state
+        (DESIGN §9)."""
+        if enc_len == 0:
+            enc_len = default_enc_len(self.cfg)
+        return B.init_paged_cache(self.cfg, n_slots, num_blocks, block_size,
+                                  self.dtype, enc_len=enc_len)
+
+    def prefill_paged(self, params, tokens, positions, tables, cache,
+                      extras: Optional[Dict[str, jnp.ndarray]] = None,
+                      last_only: bool = False):
+        """Chunked prefill through the paged pools: `tables` is the (B, MB)
+        per-request physical block table (DESIGN §9)."""
+        return B.forward_cached(params, tokens, positions, cache, self.cfg,
+                                decode=False, extras=extras,
+                                last_only=last_only, tables=tables)
+
+    def decode_step_paged(self, params, tokens, seq_lens, tables, cache):
+        """Paged decode step (DESIGN §9): like `decode_step` but K/V are
+        read and written through the per-request block tables."""
+        logits, cache = B.forward_cached(
+            params, tokens[:, None], seq_lens[:, None], cache, self.cfg,
+            decode=True, tables=tables)
+        return logits[:, 0], cache
+
     def prefill(self, params, tokens, positions, cache,
                 extras: Optional[Dict[str, jnp.ndarray]] = None,
                 last_only: bool = False):

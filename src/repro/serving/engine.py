@@ -22,9 +22,10 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config.base import ModelConfig, ServeConfig
-from repro.core.batching import make_policy
+from repro.core.batching import bucketize, make_policy
 from repro.core.lanes import lane_order, pack_chunks
 from repro.core.memory_model import MemoryModel
 from repro.core.telemetry import Telemetry
@@ -60,20 +61,36 @@ def cache_copy_row(cache: Dict[str, Any], dst: int, src: int) -> Dict[str, Any]:
     return out
 
 
-def cache_clear_row(cache: Dict[str, Any], i: int) -> Dict[str, Any]:
+def state_clear_row(cache: Dict[str, Any], i: int) -> Dict[str, Any]:
+    """Zero the per-slot state of one physical row — all paged mode needs
+    (`pos` lives in the block pool there and is cleared when blocks free,
+    DESIGN §9)."""
     out = dict(cache)
-    if "pos" in cache:
-        out["pos"] = cache["pos"].at[i].set(-1)
     for k in ("conv", "rec", "ssm"):
         if k in cache:
             out[k] = cache[k].at[:, i].set(0)
     return out
 
 
+def cache_clear_row(cache: Dict[str, Any], i: int) -> Dict[str, Any]:
+    out = state_clear_row(cache, i)
+    if "pos" in cache:
+        out["pos"] = cache["pos"].at[i].set(-1)
+    return out
+
+
+# per-slot state keys in paged mode: everything except the k/v/pos pools
+_POOL_KEYS = ("k", "v", "pos")
+
+
 def cache_gather(cache: Dict[str, Any], rows) -> Dict[str, Any]:
     """Gather a (possibly non-contiguous) set of physical rows into a
-    compact sub-cache — the multi-lane prefill batch (DESIGN §6)."""
-    return {k: jnp.take(v, rows, axis=_batch_axis(k))
+    compact sub-cache — the multi-lane prefill batch (DESIGN §6) and the
+    paged per-slot state (DESIGN §9). Out-of-bounds rows (the paged
+    padding sentinel) read as zeros — NOT the jnp.take default NaN fill,
+    which would trip JAX_DEBUG_NANS on every padded step."""
+    return {k: jnp.take(v, rows, axis=_batch_axis(k), mode="fill",
+                        fill_value=0)
             for k, v in cache.items()}
 
 
@@ -112,14 +129,27 @@ class Engine:
         # live outside every decode bucket so masked decode steps can never
         # touch their (stateful) cache rows (DESIGN §6)
         self.n_lanes = max(1, serve.n_prefill_lanes)
-        self.cache = model.init_cache(self.max_slots + self.n_lanes,
-                                      max_context, enc_len=enc_len,
-                                      prefill_chunk=prefill_chunk)
         eta = serve.kv_pool_tokens or self.max_slots * max_context
         self.mem = MemoryModel(self.cfg, hbm_budget_bytes=0,
                                eps_m=serve.eps_m,
                                block_size=serve.block_size, eta_tokens=eta)
         self.blocks = BlockManager(self.mem.eta, serve.block_size)
+        self.paged = serve.paged_kv
+        self.n_slots = self.max_slots + self.n_lanes
+        # per-request block-table width: enough blocks for a full context
+        self.max_blocks = -(-max_context // serve.block_size)
+        if self.paged:
+            # physically paged cache (DESIGN §9): K/V pools sized by the
+            # allocator's block count — BlockManager's tables ARE the
+            # storage map. Requests pin a per-slot state row for life.
+            self.cache = model.init_paged_cache(
+                self.n_slots, self.mem.num_blocks, serve.block_size,
+                enc_len=enc_len)
+            self._free_slots = list(range(self.n_slots))
+        else:
+            self.cache = model.init_cache(self.n_slots, max_context,
+                                          enc_len=enc_len,
+                                          prefill_chunk=prefill_chunk)
         self.tel = Telemetry()
         self.policy = make_policy(serve, self.mem)
 
@@ -135,6 +165,15 @@ class Engine:
         self.total_decoded = 0
         self.total_finished = 0
         self.preemptions = 0
+        self.oom_events = 0       # admission refusals at the watermark
+        self.rejected = 0         # requests too large for the pool, dropped
+        # contiguous-layout row copies (promotion/compaction/eviction);
+        # stays 0 under paged_kv — the paged layout's headline win
+        self.copy_rows = 0
+        self.copy_bytes = 0
+        self._row_bytes = 0 if self.paged else sum(
+            int(v.size // v.shape[_batch_axis(k)]) * v.dtype.itemsize
+            for k, v in self.cache.items())
         self.decode_steps = 0
         self.batch_trace: List[int] = []
         self.tbt_trace: List[float] = []
@@ -145,6 +184,20 @@ class Engine:
         self._decode_jit = jax.jit(self._decode_fn)
         self._prefill_jit = jax.jit(self._prefill_fn)
         self._prefill_lanes_jit = jax.jit(self._prefill_lanes_fn)
+        # donate the cache operand (arg 5 in both paged fns) so XLA updates
+        # the K/V pools in place instead of copying them every step — the
+        # whole point of the paged layout. CPU doesn't implement donation
+        # (it would just warn), so only donate on accelerators.
+        donate = () if jax.default_backend() == "cpu" else (5,)
+        self._decode_paged_jit = jax.jit(self._decode_paged_fn,
+                                         donate_argnums=donate)
+        self._prefill_paged_jit = jax.jit(self._prefill_paged_fn,
+                                          donate_argnums=donate)
+        # device-table cache keyed by (call-site, shape): fused intervals
+        # alternate between the prefill-group and decode-bucket tables
+        # (which can share a shape), so a single slot would thrash
+        self._tables_dev: Dict[Tuple[str, Tuple[int, int]],
+                               Tuple[np.ndarray, jnp.ndarray]] = {}
 
     # -- jit'd steps ----------------------------------------------------------
     def _decode_fn(self, params, tokens, seq_lens, cache):
@@ -160,6 +213,87 @@ class Engine:
         sub = cache_gather(cache, rows)
         logits, sub = self.model.prefill(params, tokens, positions, sub, None)
         return logits, cache_scatter(cache, sub, rows)
+
+    # -- paged-mode jit'd steps (DESIGN §9) ------------------------------------
+    # K/V pools + the pos map are global (no batch axis); per-slot state is
+    # gathered by the requests' pinned rows, run, and scattered back. Row
+    # index n_slots is the padding sentinel: its gathers read as zeros
+    # (cache_gather fills OOB) and its scatters drop.
+    def _split_state(self, cache):
+        return {k: v for k, v in cache.items() if k not in _POOL_KEYS}
+
+    def _merge_paged(self, cache, sub, rows):
+        out = dict(cache)
+        for k in _POOL_KEYS:
+            if k in sub:
+                out[k] = sub[k]
+        state_new = self._split_state(sub)
+        if state_new:
+            out.update(cache_scatter(
+                {k: cache[k] for k in state_new}, state_new, rows))
+        return out
+
+    def _decode_paged_fn(self, params, tokens, seq_lens, tables, rows, cache):
+        sub = cache_gather(self._split_state(cache), rows)
+        for k in _POOL_KEYS:
+            if k in cache:
+                sub[k] = cache[k]
+        logits, sub = self.model.decode_step_paged(
+            params, tokens, seq_lens, tables, sub)
+        return logits, self._merge_paged(cache, sub, rows)
+
+    def _prefill_paged_fn(self, params, tokens, positions, tables, rows,
+                          cache, extras):
+        sub = cache_gather(self._split_state(cache), rows)
+        for k in _POOL_KEYS:
+            if k in cache:
+                sub[k] = cache[k]
+        logits, sub = self.model.prefill_paged(
+            params, tokens, positions, tables, sub, extras)
+        return logits, self._merge_paged(cache, sub, rows)
+
+    # -- paged-mode host-side helpers ------------------------------------------
+    def _tables_for(self, reqs, pad_to: int = 0,
+                    kind: str = "prefill") -> jnp.ndarray:
+        """Device block tables for a batch: row i holds request i's physical
+        block ids from the BlockManager, -1-padded (DESIGN §9). Tables only
+        change on block grow / membership changes (at most once per
+        block_size steps per request), so the device upload is reused while
+        the host copy is unchanged."""
+        n = max(pad_to, len(reqs), 1)
+        tbl = np.full((n, self.max_blocks), -1, np.int32)
+        for i, r in enumerate(reqs):
+            ids = self.blocks.tables.get(r.rid, [])
+            tbl[i, :len(ids)] = ids
+        key = (kind, tbl.shape)
+        cached = self._tables_dev.get(key)
+        if cached is not None and np.array_equal(cached[0], tbl):
+            return cached[1]
+        dev = jnp.asarray(tbl)
+        self._tables_dev[key] = (tbl, dev)
+        return dev
+
+    def _release_blocks(self, freed: List[int]):
+        """Clear the pos-pool rows of freed blocks so a future tenant never
+        sees the previous request's stale positions (DESIGN §9)."""
+        if self.paged and freed and "pos" in self.cache:
+            out = dict(self.cache)
+            out["pos"] = out["pos"].at[jnp.asarray(freed, jnp.int32)].set(-1)
+            self.cache = out
+
+    def _free_request(self, r) -> None:
+        """Release a request's blocks (+ slot/pos rows in paged mode)."""
+        freed = self.blocks.free(r.rid)
+        if self.paged:
+            self._release_blocks(freed)
+            if r.slot >= 0:
+                self._free_slots.append(r.slot)
+                r.slot = -1
+
+    def _copy_row(self, dst: int, src: int):
+        self.cache = cache_copy_row(self.cache, dst, src)
+        self.copy_rows += 1
+        self.copy_bytes += self._row_bytes
 
     # -- public API -------------------------------------------------------------
     def submit(self, prompt_tokens: List[int], max_new_tokens: int = 0,
@@ -182,6 +316,28 @@ class Engine:
         Covers every full-chunk shape: the single-row graph plus one
         multi-row lane graph per group size 2..n_prefill_lanes (tail chunks
         still compile on first use — one graph per distinct tail length)."""
+        if self.paged:
+            # all-padding warmup batches: positions -1 write nothing, table
+            # entries -1 read nothing, sentinel rows scatter-drop. The cache
+            # operand is donated, so rebind the returned (content-identical)
+            # cache each call.
+            for b in self.buckets:
+                toks = jnp.zeros((b,), jnp.int32)
+                lens = jnp.full((b,), -1, jnp.int32)
+                tables = jnp.full((b, self.max_blocks), -1, jnp.int32)
+                rows = jnp.full((b,), self.n_slots, jnp.int32)
+                logits, self.cache = self._decode_paged_jit(
+                    self.params, toks, lens, tables, rows, self.cache)
+                jax.block_until_ready(logits)
+            for g in range(1, self.n_lanes + 1):
+                tt = jnp.zeros((g, self.prefill_chunk), jnp.int32)
+                pos = jnp.full((g, self.prefill_chunk), -1, jnp.int32)
+                tables = jnp.full((g, self.max_blocks), -1, jnp.int32)
+                rows = jnp.full((g,), self.n_slots, jnp.int32)
+                logits, self.cache = self._prefill_paged_jit(
+                    self.params, tt, pos, tables, rows, self.cache, None)
+                jax.block_until_ready(logits)
+            return
         for b in self.buckets:
             sub = cache_take(self.cache, 0, b)
             toks = jnp.zeros((b,), jnp.int32)
@@ -213,7 +369,13 @@ class Engine:
             n_prefill=len(self.waiting) + len(self.prefilling),
             n_decode=len(self.active), free_tokens=self.blocks.free_tokens)
         decision = self.policy.step(tel)
-        cap = min(decision.max_batch, self.max_slots)
+        # sim-mirrored admission (DESIGN §7): bucketize the controller's cap
+        # to the compiled batch buckets and apply the shared
+        # BlockManager.admission_verdict (vLLM 1% watermark + unservable
+        # rejection), counting watermark refusals as oom_events
+        cap = bucketize(decision.max_batch, self.serve.batch_buckets) \
+            if self.serve.batch_buckets else decision.max_batch
+        cap = min(cap, self.max_slots)
 
         # admission
         while self.waiting \
@@ -222,8 +384,22 @@ class Engine:
             need = r.prompt_len + 1
             if self.mem.bytes_per_token == 0:
                 need = self.serve.block_size
-            if not self.blocks.allocate(r.rid, 0, need):
+            verdict = self.blocks.admission_verdict(
+                self.blocks.blocks_needed(0, need, r.rid), self.max_blocks)
+            if verdict != "admit":
+                if verdict == "reject":
+                    # no pool state can ever hold it (bigger than the pool
+                    # minus the watermark, or than the block-table width):
+                    # drop it rather than wedging the queue behind it
+                    self.waiting.pop(0)
+                    r.state = RequestState.FINISHED
+                    r.rejected = True
+                    r.finish_time = self._now()
+                    self.rejected += 1
+                    continue
+                self.oom_events += 1
                 break
+            self.blocks.allocate(r.rid, 0, need)
             self.waiting.pop(0)
             if self.serve.chunked_prefill:
                 r.state = RequestState.PREFILLING
@@ -265,8 +441,14 @@ class Engine:
             if not queued:
                 break
             _, r = queued.pop(0)
-            slot = self.max_slots + j
-            self.cache = cache_clear_row(self.cache, slot)
+            if self.paged:
+                # pin a state row for the request's whole life: promotion
+                # will be a pure bookkeeping move (DESIGN §9)
+                slot = self._free_slots.pop()
+                self.cache = state_clear_row(self.cache, slot)
+            else:
+                slot = self.max_slots + j
+                self.cache = cache_clear_row(self.cache, slot)
             r.lane = j
             r.slot = slot
             self.lanes[j] = r
@@ -302,19 +484,45 @@ class Engine:
         dt_ms = 0.0
         last_logits: Dict[int, Any] = {}   # lane -> logits of its chunk
         for j, r, take in single:
-            slot = self.max_slots + j
             piece = r.prompt_tokens[:take]
             tt = jnp.array([piece], jnp.int32)
             pos = jnp.array([list(range(take))], jnp.int32)
-            sub = cache_take(self.cache, slot, 1)
             t0 = time.perf_counter()
-            logits, sub = self._prefill_jit(self.params, tt, pos, sub,
-                                            r.extras)
+            if self.paged:
+                logits, self.cache = self._prefill_paged_jit(
+                    self.params, tt, pos, self._tables_for([r]),
+                    jnp.array([r.slot], jnp.int32), self.cache, r.extras)
+            else:
+                slot = self.max_slots + j
+                sub = cache_take(self.cache, slot, 1)
+                logits, sub = self._prefill_jit(self.params, tt, pos, sub,
+                                                r.extras)
             logits = jax.block_until_ready(logits)
             dt_ms += (time.perf_counter() - t0) * 1e3
-            self.cache = cache_put(self.cache, sub, slot)
+            if not self.paged:
+                self.cache = cache_put(self.cache, sub, slot)
             last_logits[j] = logits[0]
         for take, entries in groups.items():
+            if self.paged:
+                # one paged graph per (rows, chunk) shape: the requests'
+                # pinned state rows + block tables (DESIGN §9)
+                reqs = [r for _, r, _ in entries]
+                rows = jnp.array([r.slot for r in reqs], jnp.int32)
+                tt = jnp.array(
+                    [r.prompt_tokens[r.prefill_pos:r.prefill_pos + take]
+                     for r in reqs], jnp.int32)
+                pos = jnp.array(
+                    [list(range(r.prefill_pos, r.prefill_pos + take))
+                     for r in reqs], jnp.int32)
+                t0 = time.perf_counter()
+                logits, self.cache = self._prefill_paged_jit(
+                    self.params, tt, pos, self._tables_for(reqs), rows,
+                    self.cache, None)
+                logits = jax.block_until_ready(logits)
+                dt_ms += (time.perf_counter() - t0) * 1e3
+                for i, (j, _, _) in enumerate(entries):
+                    last_logits[j] = logits[i]
+                continue
             if len(entries) == 1:
                 # single row: contiguous slice path (identical graph to the
                 # legacy single-spare-row engine — keeps n_prefill_lanes=1
@@ -355,15 +563,18 @@ class Engine:
         for _, r, take in plan:
             r.prefill_pos += take
         # promote finished lanes (lane-index order: deterministic) into the
-        # compacted decode region
+        # decode region: paged mode keeps the pinned row — an O(1)
+        # bookkeeping move, zero tensor copies (DESIGN §9); contiguous mode
+        # copies the lane row into the compacted region
         for j, r, take in sorted(plan, key=lambda e: e[0]):
             if r.prefill_pos < r.prompt_len:
                 continue
             self.prefilling.remove(r)
             self.lanes[j] = None
-            dst = len(self.active)
-            self.cache = cache_copy_row(self.cache, dst, self.max_slots + j)
-            r.slot = dst
+            if not self.paged:
+                dst = len(self.active)
+                self._copy_row(dst, self.max_slots + j)
+                r.slot = dst
             r.lane = -1
             r.state = RequestState.RUNNING
             r.first_token_time = self._now()
@@ -382,32 +593,52 @@ class Engine:
 
     # -- internals ---------------------------------------------------------------
     def _prefill_request(self, r: Request):
-        slot = len(self.active)
-        r.slot = slot
+        if self.paged:
+            slot = self._free_slots.pop()
+            r.slot = slot
+            self.cache = state_clear_row(self.cache, slot)
+        else:
+            slot = len(self.active)
+            r.slot = slot
+            self.cache = cache_clear_row(self.cache, slot)
         r.state = RequestState.PREFILLING
-        self.cache = cache_clear_row(self.cache, slot)
         chunk = self.prefill_chunk
         toks = r.prompt_tokens
-        sub = cache_take(self.cache, slot, 1)
         extras = getattr(r, "extras", None)
         last_logits = None
         # exact-size chunks: stateful families (SSM conv/recurrence) must not
         # see pad tokens — full chunks + one exact-size tail call (jit caches
         # one graph per distinct tail length)
         pieces = [(s, toks[s:s + chunk]) for s in range(0, len(toks), chunk)]
-        for start, piece in pieces:
-            tt = jnp.array([piece], jnp.int32)
-            pos = jnp.array([list(range(start, start + len(piece)))], jnp.int32)
-            ex = extras if start == 0 else None
-            logits, sub = self._prefill_jit(self.params, tt, pos, sub, ex)
-            last_logits = logits[0, len(piece) - 1]
-        self.cache = cache_put(self.cache, sub, slot)
+        if self.paged:
+            tables = self._tables_for([r])
+            rows = jnp.array([slot], jnp.int32)
+            for start, piece in pieces:
+                tt = jnp.array([piece], jnp.int32)
+                pos = jnp.array([list(range(start, start + len(piece)))],
+                                jnp.int32)
+                ex = extras if start == 0 else None
+                logits, self.cache = self._prefill_paged_jit(
+                    self.params, tt, pos, tables, rows, self.cache, ex)
+                last_logits = logits[0, len(piece) - 1]
+        else:
+            sub = cache_take(self.cache, slot, 1)
+            for start, piece in pieces:
+                tt = jnp.array([piece], jnp.int32)
+                pos = jnp.array([list(range(start, start + len(piece)))],
+                                jnp.int32)
+                ex = extras if start == 0 else None
+                logits, sub = self._prefill_jit(self.params, tt, pos, sub, ex)
+                last_logits = logits[0, len(piece) - 1]
+            self.cache = cache_put(self.cache, sub, slot)
         r.state = RequestState.RUNNING
         r.first_token_time = self._now()
         r.output_tokens.append(int(jnp.argmax(last_logits)))
         self.active.append(r)
 
     def _preempt_if_needed(self):
+        if self.mem.bytes_per_token == 0:
+            return  # constant per-request state: decode never grows it
         while self.active:
             need = sum(self.blocks.blocks_needed(r.context_len, 1, r.rid)
                        for r in self.active)
@@ -417,7 +648,10 @@ class Engine:
             self._evict(len(self.active) - 1, victim)
 
     def _evict(self, slot: int, r: Request):
-        self.blocks.free(r.rid)
+        """Evict active[slot] for recompute. `slot` is the index in
+        `self.active`; paged mode just releases blocks + state row (O(1)),
+        contiguous mode compacts by moving the last row into the hole."""
+        self._free_request(r)
         r.state = RequestState.WAITING
         r.output_tokens.clear()
         r.tbt_samples.clear()
@@ -425,12 +659,15 @@ class Engine:
         # (a stale prefill_start_time would count the first life — decode
         # included — as prefill service)
         r.prefill_start_time = -1.0
-        last = len(self.active) - 1
-        if slot != last:
-            self.cache = cache_copy_row(self.cache, slot, last)
-            self.active[slot] = self.active[last]
-            self.active[slot].slot = slot
-        self.active.pop()
+        if self.paged:
+            self.active.pop(slot)
+        else:
+            last = len(self.active) - 1
+            if slot != last:
+                self._copy_row(slot, last)
+                self.active[slot] = self.active[last]
+                self.active[slot].slot = slot
+            self.active.pop()
         self.waiting.insert(0, r)
         self.preemptions += 1
 
@@ -443,14 +680,28 @@ class Engine:
         lens = [r.context_len - 1 for r in self.active] + [-1] * (bucket - n)
         tt = jnp.array(toks, jnp.int32)
         ll = jnp.array(lens, jnp.int32)
-        sub = cache_take(self.cache, 0, bucket)
 
-        t0 = time.perf_counter()
-        logits, sub = self._decode_jit(self.params, tt, ll, sub)
-        logits = jax.block_until_ready(logits)
-        dt_ms = (time.perf_counter() - t0) * 1e3 + extra_ms
+        # host-side prep (tables build / row slicing) stays OUTSIDE the
+        # timed window in both modes so TBT compares the model step only
+        if self.paged:
+            rows = jnp.array([r.slot for r in self.active]
+                             + [self.n_slots] * (bucket - n), jnp.int32)
+            tables = self._tables_for(self.active, pad_to=bucket,
+                                      kind="decode")
+            t0 = time.perf_counter()
+            logits, cache = self._decode_paged_jit(
+                self.params, tt, ll, tables, rows, self.cache)
+            logits = jax.block_until_ready(logits)
+            dt_ms = (time.perf_counter() - t0) * 1e3 + extra_ms
+            self.cache = cache
+        else:
+            sub = cache_take(self.cache, 0, bucket)
+            t0 = time.perf_counter()
+            logits, sub = self._decode_jit(self.params, tt, ll, sub)
+            logits = jax.block_until_ready(logits)
+            dt_ms = (time.perf_counter() - t0) * 1e3 + extra_ms
+            self.cache = cache_put(self.cache, sub, 0)
 
-        self.cache = cache_put(self.cache, sub, 0)
         self.key, sk = jax.random.split(self.key)
         next_toks = [int(x) for x in sample(logits[:n], sk, self.temperature)]
 
@@ -461,26 +712,44 @@ class Engine:
         self.total_decoded += n
 
         finished = []
+        grow_failed = []
         for i, r in enumerate(self.active):
-            self.blocks.allocate(r.rid, r.context_len, 1)
+            # grow the KV footprint for the NEXT step's write. State-only
+            # families (bytes_per_token == 0) hold constant per-request
+            # state — growing them would drain free_tokens linearly and
+            # starve admission with phantom usage.
+            grew = True
+            if self.mem.bytes_per_token != 0:
+                grew = self.blocks.allocate(r.rid, r.context_len, 1)
             r.output_tokens.append(next_toks[i])
             r.tbt_samples.append(dt_ms)
             if len(r.output_tokens) >= r.max_new_tokens \
                     or r.context_len >= self.max_context - 1:
                 finished.append(i)
+            elif not grew:
+                # failed grow: the emitted token has no backing block for
+                # its successor — preempt (recompute) instead of silently
+                # drifting the allocator
+                grow_failed.append(r)
         for i in sorted(finished, reverse=True):
             r = self.active[i]
             r.state = RequestState.FINISHED
             r.finish_time = self._now()
             self.tel.on_completion(len(r.output_tokens))
-            self.blocks.free(r.rid)
-            last = len(self.active) - 1
-            if i != last:
-                self.cache = cache_copy_row(self.cache, i, last)
-                self.active[i] = self.active[last]
-                self.active[i].slot = i
-            self.active.pop()
+            self._free_request(r)
+            if self.paged:
+                self.active.pop(i)
+            else:
+                last = len(self.active) - 1
+                if i != last:
+                    self._copy_row(i, last)
+                    self.active[i] = self.active[last]
+                    self.active[i].slot = i
+                self.active.pop()
             self.total_finished += 1
+        for r in grow_failed:
+            if r in self.active:
+                self._evict(self.active.index(r), r)
 
     # -- metrics ---------------------------------------------------------------
     def summary(self) -> Dict[str, float]:
@@ -497,6 +766,11 @@ class Engine:
             if self.tbt_trace else 0.0,
             "finished": self.total_finished,
             "preemptions": self.preemptions,
+            "oom_events": self.oom_events,
+            "rejected": self.rejected,
+            # contiguous-layout row copies; 0 under paged_kv (DESIGN §9)
+            "copy_rows": float(self.copy_rows),
+            "copy_bytes": float(self.copy_bytes),
             # PD fusion (DESIGN §6)
             "prefill_lane_occupancy": (sum(occ) / len(occ)) if occ else 0.0,
             "prefill_tokens": float(self.tel.prefill_tokens_total),

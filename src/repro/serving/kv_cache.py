@@ -1,13 +1,12 @@
 """Block-granular KV pool accounting (vLLM-style allocator).
 
-The bottom layer of the controller stack (DESIGN §1). On TPU the physical
-cache is a contiguous padded tensor per batch slot — decode buckets plus
-the PD-fusion prefill lanes (DESIGN §3, §6); paging lives at the
-*allocator* level: this class tracks block ownership so the scheduler sees
-the same free-token signal a paged GPU allocator would provide, and
-admission control + preemption use it. The block table per request is
-maintained (host-side) so the accounting is faithful to the paper's vLLM
-deployment.
+The bottom layer of the controller stack (DESIGN §1). With the physically
+paged cache (`ServeConfig.paged_kv`, DESIGN §9) the per-request block
+tables kept here ARE the storage map: token position p of request r lives
+in physical pool block `tables[r][p // block_size]`, and the engine ships
+the tables to the paged decode kernel each step. With the legacy
+contiguous cache (DESIGN §3) the same accounting runs as bookkeeping only,
+so the scheduler sees the identical free-token signal either way.
 """
 from __future__ import annotations
 
@@ -45,6 +44,25 @@ class BlockManager:
     def can_allocate(self, cur_tokens: int, new_tokens: int, rid: int) -> bool:
         return self.blocks_needed(cur_tokens, new_tokens, rid) <= self.free_blocks
 
+    def admission_verdict(self, blocks_needed: int,
+                          max_blocks: int = 0) -> str:
+        """Shared engine/sim admission gate (DESIGN §7): the vLLM-style 1%
+        free-block watermark plus the unservable-request bound.
+
+        Returns "admit" (enough pool headroom), "defer" (watermark refusal
+        that a future pool state can satisfy), or "reject" (no pool state
+        can ever satisfy it — larger than the pool minus the watermark, or
+        than `max_blocks`, the per-request block-table width, if given)."""
+        watermark = max(self.num_blocks // 100, 1)
+        if self.free_blocks - blocks_needed >= watermark:
+            if max_blocks and blocks_needed > max_blocks:
+                return "reject"
+            return "admit"
+        cap = self.num_blocks - watermark
+        if max_blocks:
+            cap = min(cap, max_blocks)
+        return "reject" if blocks_needed > cap else "defer"
+
     # -- mutations ------------------------------------------------------------
     def allocate(self, rid: int, cur_tokens: int, new_tokens: int) -> bool:
         n = self.blocks_needed(cur_tokens, new_tokens, rid)
@@ -55,9 +73,12 @@ class BlockManager:
             tbl.append(self._free.pop())
         return True
 
-    def free(self, rid: int) -> None:
-        for b in self.tables.pop(rid, ()):
-            self._free.append(b)
+    def free(self, rid: int) -> List[int]:
+        """Release a request's blocks; returns the freed physical ids so the
+        paged engine can clear their position-pool rows (DESIGN §9)."""
+        freed = self.tables.pop(rid, [])
+        self._free.extend(freed)
+        return freed
 
     def reset(self) -> None:
         self._free = list(range(self.num_blocks))

@@ -24,6 +24,10 @@ class Request:
     true_output_len: int = 0                     # simulator: sampled a priori
 
     state: RequestState = RequestState.WAITING
+    # set when admission drops the request as unservable (bigger than the
+    # pool minus the watermark, or than the block-table width — DESIGN §9);
+    # state is FINISHED with no output, this flag tells the two apart
+    rejected: bool = False
     prefill_pos: int = 0                         # chunked-prefill progress
     output_tokens: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1                               # engine batch slot

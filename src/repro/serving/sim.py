@@ -65,6 +65,7 @@ class SimResult:
     finished: int = 0
     preemptions: int = 0
     oom_events: int = 0
+    rejected: int = 0               # requests too large for the pool, dropped
     tbt_ms_mean: float = 0.0
     tbt_ms_p95: float = 0.0
     ttft_p90_s: float = 0.0         # time-to-first-token (queueing + prefill)
@@ -92,13 +93,19 @@ class ServingSimulator:
 
     def __init__(self, cfg: ModelConfig, serve: ServeConfig, cost: CostModel,
                  lengths: LengthDist, seed: int = 0,
-                 policy: Optional[Policy] = None, prefill_chunk: int = 0):
+                 policy: Optional[Policy] = None, prefill_chunk: int = 0,
+                 max_context: int = 0):
         self.cfg = cfg
         self.serve = serve
         self.cost = cost
         self.lengths = lengths
         self.rng = random.Random(seed)
         self.prefill_chunk = prefill_chunk
+        # engine-mirrored per-request block-table width (DESIGN §9): with a
+        # max_context the sim rejects prompts wider than the table exactly
+        # like the engine; 0 = unbounded (the sim has no physical table)
+        self.max_blocks = -(-max_context // serve.block_size) \
+            if max_context else 0
         self.n_lanes = max(1, serve.n_prefill_lanes)
         # PD-fusion lanes (DESIGN §6): sticky request-per-lane, same
         # semantics as the engine's spare physical rows
@@ -168,9 +175,17 @@ class ServingSimulator:
             need = r.context_len + 1  # context covers recompute re-prefill
             if self.mem.bytes_per_token == 0:
                 need = self.serve.block_size  # state-only families
-            blocks_needed = self.blocks.blocks_needed(0, need, r.rid)
-            watermark = max(self.blocks.num_blocks // 100, 1)  # vLLM 1%
-            if self.blocks.free_blocks - blocks_needed < watermark:
+            # shared engine/sim gate (DESIGN §7): vLLM 1% watermark +
+            # unservable rejection live in BlockManager.admission_verdict
+            verdict = self.blocks.admission_verdict(
+                self.blocks.blocks_needed(0, need, r.rid), self.max_blocks)
+            if verdict != "admit":
+                if verdict == "reject":
+                    self.waiting.remove(r)
+                    r.state = RequestState.FINISHED
+                    r.rejected = True
+                    self.res.rejected += 1
+                    continue
                 self.res.oom_events += 1
                 break
             self.blocks.allocate(r.rid, 0, need)
@@ -183,6 +198,8 @@ class ServingSimulator:
 
     def _preempt_if_needed(self):
         """On pool exhaustion mid-decode, evict newest requests (recompute)."""
+        if self.mem.bytes_per_token == 0:
+            return  # constant per-request state: decode never grows it
         while self.running:
             grow = [r for r in self.running
                     if self.blocks.blocks_needed(r.context_len, 1, r.rid) > 0]
@@ -238,9 +255,14 @@ class ServingSimulator:
     def _decode_step(self, fused_prefill: List[Request], chunk_budget: int):
         b = len(self.running)
         mean_ctx = sum(r.context_len for r in self.running) / max(b, 1)
-        # grow KV by one token per running request
-        for r in self.running:
-            self.blocks.allocate(r.rid, r.context_len, 1)
+        # grow KV by one token per running request. State-only families
+        # (bytes_per_token == 0) hold constant per-request state — growing
+        # them would drain free_tokens linearly (phantom usage, spurious
+        # preemptions). A failed grow is an OOM event, not silent drift.
+        if self.mem.bytes_per_token != 0:
+            for r in self.running:
+                if not self.blocks.allocate(r.rid, r.context_len, 1):
+                    self.res.oom_events += 1
         pf_tokens = 0
         if fused_prefill:
             self._fill_lanes(fused_prefill)
