@@ -9,7 +9,8 @@ def csv_out(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
-BENCHES = ("fig3", "table1", "table2", "fig4", "ablation", "burst", "roofline")
+BENCHES = ("fig3", "table1", "table2", "fig4", "ablation", "burst",
+           "prefix", "roofline")
 
 
 def main() -> None:
@@ -33,6 +34,8 @@ def main() -> None:
                 from benchmarks.ablation_eps import run
             elif name == "burst":
                 from benchmarks.burst_response import run
+            elif name == "prefix":
+                from benchmarks.prefix_caching import run
             else:
                 from benchmarks.roofline import run
             run(csv_out)

@@ -239,6 +239,12 @@ class ServeConfig:
     # compaction and eviction become O(1) table edits. False keeps the
     # legacy contiguous per-slot cache (n_prefill_lanes=1 bit-for-bit).
     paged_kv: bool = False
+    # ref-counted automatic prefix sharing on the paged pool (DESIGN §10):
+    # per-block refcounts + content-hash index; admission maps shared full
+    # prompt blocks with zero copies and prefills only the suffix; free()
+    # becomes decref with blocks held as evictable LRU cache. Requires
+    # paged_kv and an attention-only family (gated per-engine).
+    prefix_cache: bool = False
     kv_pool_tokens: int = 0        # η; 0 => derived from memory budget
     hbm_budget_bytes: int = 0      # M_max source; 0 => engine-provided
     scheduling_interval: int = 1   # controller cadence (decode steps)

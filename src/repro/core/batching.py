@@ -143,6 +143,17 @@ class BatchingSLA(Policy):
         c = self.cfg
         tau = tel.tbt_ms
         b_bar = int(round(tel.mean_batch)) or self.b_low
+        if tel.tbt_samples <= 0:
+            # cold start: an empty TBT window reads as tau = 0.0, which the
+            # headroom branch would take as "under SLA" every interval,
+            # ratcheting the window to b_max before a single decode step has
+            # been measured. Hold the window and emit the midpoint until
+            # at least one on_decode_step sample exists.
+            b_t = (self.b_low + self.b_high) // 2
+            b_t = min(max(b_t, tel.n_decode_running), c.b_max)
+            b_t = max(b_t, c.b_min)
+            return BatchDecision(max_batch=b_t, b_sla=b_t,
+                                 chunk_budget=self._chunk_budget(b_t, tel))
         if tau > c.d_sla_ms + c.eps_d_ms:
             # too slow: clamp the ceiling down to the observed batch
             self.b_high = max(b_bar, self.b_low + c.alpha)

@@ -113,6 +113,12 @@ class MemoryModel:
         block count IS the pool's leading dimension (DESIGN §9)."""
         return self.eta // self.block_size
 
+    def tokens_to_bytes(self, tokens: int) -> int:
+        """Usage-reporting helper (DESIGN §10): the BlockManager's logical
+        (per-request) vs physical (deduped) token counts expressed in HBM
+        bytes, so operators see what prefix sharing actually saves."""
+        return tokens * self._bpt
+
     def max_requests_state_only(self) -> int:
         """SSM-style cap: requests whose state fits the budget."""
         per = self.fixed_bytes_per_request()

@@ -23,9 +23,15 @@ class TelemetrySnapshot:
     mean_out: float = 0.0            # E[l_out] (observed completions, EW)
     var_out: float = 0.0
     tbt_ms: float = 0.0              # tau-bar: recent mean decode latency
+    tbt_samples: int = 0             # decode steps in the TBT window (0 = cold)
     mean_batch: float = 0.0          # b-bar: recent mean decode batch size
     arrival_rate: float = 0.0        # lambda(t) req/s
     free_tokens: int = 0             # free KV-pool tokens (blocks*block_size)
+    # prefix sharing (DESIGN §10): per-request footprints summed vs deduped
+    # distinct-block usage — free_tokens counts evictable cached blocks as
+    # free, these two make the dedup visible to the controller/operator
+    logical_used_tokens: int = 0
+    physical_used_tokens: int = 0
     now: float = 0.0
     # PD fusion (DESIGN §6): recent mean fraction of prefill lanes packed
     # with work, and EW-mean TTFT split into queueing vs prefill service
@@ -105,14 +111,20 @@ class Telemetry:
 
     # -- snapshot ------------------------------------------------------------
     def arrival_rate(self, now: float, horizon: float = 10.0) -> float:
+        """Arrivals per second over the observation horizon.
+
+        Divides by the full horizon (clamped to elapsed time), NOT by
+        `now - recent[0]`: a single fresh arrival would otherwise yield a
+        1/1e-6 = 1e6 req/s spike that poisons the controller's lambda(t)."""
         recent = [a for a in self.arrivals if a > now - horizon]
         if not recent:
             return 0.0
-        span = max(now - recent[0], 1e-6)
+        span = max(min(now, horizon), 1e-6)
         return len(recent) / span
 
     def snapshot(self, *, now: float, n_prefill: int, n_decode: int,
-                 free_tokens: int) -> TelemetrySnapshot:
+                 free_tokens: int, logical_used_tokens: int = 0,
+                 physical_used_tokens: int = 0) -> TelemetrySnapshot:
         mi, vi = self.len_in.get(self.prior_mean_in, 0.0)
         mo, vo = self.len_out.get(self.prior_mean_out, 0.0)
         tbt = sum(self.tbt) / len(self.tbt) if self.tbt else 0.0
@@ -123,7 +135,9 @@ class Telemetry:
         return TelemetrySnapshot(
             n_prefill_waiting=n_prefill, n_decode_running=n_decode,
             mean_in=mi, var_in=vi, mean_out=mo, var_out=vo,
-            tbt_ms=tbt, mean_batch=mb,
+            tbt_ms=tbt, tbt_samples=len(self.tbt), mean_batch=mb,
             arrival_rate=self.arrival_rate(now), free_tokens=free_tokens,
+            logical_used_tokens=logical_used_tokens,
+            physical_used_tokens=physical_used_tokens,
             now=now, prefill_lane_occupancy=occ,
             ttft_queue_s=tq, ttft_prefill_s=tp)

@@ -43,6 +43,10 @@ def main():
     # paged KV cache (DESIGN §9)
     ap.add_argument("--paged", action="store_true",
                     help="physically paged KV cache (block-table pools)")
+    # prefix sharing (DESIGN §10)
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="ref-counted automatic prefix sharing "
+                         "(requires --paged; attention-only families)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, args.variant)
@@ -56,7 +60,8 @@ def main():
                         chunk_budget_tokens=args.chunk_budget,
                         n_prefill_lanes=args.lanes,
                         prefill_pack=args.pack,
-                        paged_kv=args.paged)
+                        paged_kv=args.paged,
+                        prefix_cache=args.prefix_cache)
     enc_len = 16 if default_enc_len(cfg) else 0
     eng = Engine(model, params, serve, max_context=args.max_context,
                  buckets=tuple(2 ** i for i in range(0, args.b_max.bit_length())),

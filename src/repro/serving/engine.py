@@ -30,7 +30,7 @@ from repro.core.lanes import lane_order, pack_chunks
 from repro.core.memory_model import MemoryModel
 from repro.core.telemetry import Telemetry
 from repro.models.model import Model
-from repro.serving.kv_cache import BlockManager
+from repro.serving.kv_cache import BlockManager, prefix_cache_supported
 from repro.serving.request import Request, RequestState
 from repro.serving.sampling import sample
 
@@ -133,8 +133,15 @@ class Engine:
         self.mem = MemoryModel(self.cfg, hbm_budget_bytes=0,
                                eps_m=serve.eps_m,
                                block_size=serve.block_size, eta_tokens=eta)
-        self.blocks = BlockManager(self.mem.eta, serve.block_size)
         self.paged = serve.paged_kv
+        # ref-counted prefix sharing (DESIGN §10): needs the paged pool (the
+        # contiguous layout has no shareable physical blocks) and a family
+        # whose prefix lives entirely in attention K/V blocks
+        self.prefix = (serve.prefix_cache and self.paged
+                       and prefix_cache_supported(self.cfg)
+                       and self.mem.bytes_per_token != 0)
+        self.blocks = BlockManager(self.mem.eta, serve.block_size,
+                                   prefix_cache=self.prefix)
         self.n_slots = self.max_slots + self.n_lanes
         # per-request block-table width: enough blocks for a full context
         self.max_blocks = -(-max_context // serve.block_size)
@@ -174,6 +181,11 @@ class Engine:
         self._row_bytes = 0 if self.paged else sum(
             int(v.size // v.shape[_batch_axis(k)]) * v.dtype.itemsize
             for k, v in self.cache.items())
+        # per-block pool bytes: the unit a COW duplication copies (DESIGN §10)
+        self._blk_bytes = sum(
+            int(v.size // v.shape[0 if k == "pos" else 1]) * v.dtype.itemsize
+            for k, v in self.cache.items() if k in _POOL_KEYS) \
+            if self.paged else 0
         self.decode_steps = 0
         self.batch_trace: List[int] = []
         self.tbt_trace: List[float] = []
@@ -281,8 +293,33 @@ class Engine:
             out["pos"] = out["pos"].at[jnp.asarray(freed, jnp.int32)].set(-1)
             self.cache = out
 
+    def _drain_released(self):
+        """Clear pos rows of blocks the allocator evicted from the prefix
+        cache for reuse (DESIGN §10): a new tenant must never see the cached
+        tenant's stale positions."""
+        self._release_blocks(self.blocks.take_released())
+
+    def _cow_blocks(self, pairs):
+        """Apply copy-on-write block duplications the allocator ordered
+        (`BlockManager.cow_range`): copy the K/V/pos pool rows from the
+        shared source block into the private copy. Suffix-aligned mapping
+        keeps this off the steady-state path (DESIGN §10)."""
+        if not pairs:
+            return
+        out = dict(self.cache)
+        for src, dst in pairs:
+            for k in ("k", "v"):
+                if k in out:
+                    out[k] = out[k].at[:, dst].set(out[k][:, src])
+            if "pos" in out:
+                out["pos"] = out["pos"].at[dst].set(out["pos"][src])
+            self.copy_bytes += self._blk_bytes
+        self.cache = out
+
     def _free_request(self, r) -> None:
-        """Release a request's blocks (+ slot/pos rows in paged mode)."""
+        """Release a request's blocks (+ slot/pos rows in paged mode).
+        Under prefix sharing this is a decref: registered blocks stay
+        resident as evictable cache and keep their pos rows (DESIGN §10)."""
         freed = self.blocks.free(r.rid)
         if self.paged:
             self._release_blocks(freed)
@@ -367,15 +404,20 @@ class Engine:
         tel = self.tel.snapshot(
             now=self._now(),
             n_prefill=len(self.waiting) + len(self.prefilling),
-            n_decode=len(self.active), free_tokens=self.blocks.free_tokens)
+            n_decode=len(self.active), free_tokens=self.blocks.free_tokens,
+            logical_used_tokens=self.blocks.logical_used_tokens,
+            physical_used_tokens=self.blocks.physical_used_tokens)
         decision = self.policy.step(tel)
         # sim-mirrored admission (DESIGN §7): bucketize the controller's cap
         # to the compiled batch buckets and apply the shared
         # BlockManager.admission_verdict (vLLM 1% watermark + unservable
-        # rejection), counting watermark refusals as oom_events
+        # rejection), counting watermark refusals as oom_events.
+        # bucketize rounds UP to the floor bucket when b_t is below the
+        # smallest compiled one — admitted rows must still respect the
+        # controller's decision (the graph pads, admission must not)
         cap = bucketize(decision.max_batch, self.serve.batch_buckets) \
             if self.serve.batch_buckets else decision.max_batch
-        cap = min(cap, self.max_slots)
+        cap = min(cap, decision.max_batch, self.max_slots)
 
         # admission
         while self.waiting \
@@ -384,9 +426,20 @@ class Engine:
             need = r.prompt_len + 1
             if self.mem.bytes_per_token == 0:
                 need = self.serve.block_size
-            verdict = self.blocks.admission_verdict(
-                self.blocks.blocks_needed(0, need, r.rid), self.max_blocks)
+            # prefix sharing (DESIGN §10): map every indexed full prompt
+            # block into the table first (zero copies), then gate admission
+            # on the unmatched suffix only — rolled back on refusal
+            cached = 0
+            if self.prefix and r.prompt_tokens:
+                cached = self.blocks.acquire_prefix(r.rid, r.prompt_tokens)
+            have = len(self.blocks.tables.get(r.rid, ()))
+            nb = self.blocks.blocks_needed(0, need, r.rid)
+            mb = self.max_blocks - have
+            verdict = "reject" if mb <= 0 and nb > 0 \
+                else self.blocks.admission_verdict(nb, mb)
             if verdict != "admit":
+                if cached:
+                    self.blocks.free(r.rid)
                 if verdict == "reject":
                     # no pool state can ever hold it (bigger than the pool
                     # minus the watermark, or than the block-table width):
@@ -400,13 +453,17 @@ class Engine:
                 self.oom_events += 1
                 break
             self.blocks.allocate(r.rid, 0, need)
+            if self.prefix:
+                self.blocks.note_prefix_query(r.prompt_len, cached)
+            r.cached_prefix_len = cached
             self.waiting.pop(0)
             if self.serve.chunked_prefill:
                 r.state = RequestState.PREFILLING
-                r.prefill_pos = 0
+                r.prefill_pos = cached
                 self.prefilling.append(r)
             else:
                 self._prefill_request(r)
+        self._drain_released()
 
         self._preempt_if_needed()
         if self.serve.chunked_prefill:
@@ -467,6 +524,13 @@ class Engine:
         for _, r, _ in plan:
             if r.prefill_start_time < 0:
                 r.prefill_start_time = self._now()
+        if self.prefix:
+            # COW guard (DESIGN §10): a shared block in this chunk's write
+            # range gets a private copy first — structurally unreachable
+            # with block-aligned suffixes, kept as the safety invariant
+            for _, r, take in plan:
+                self._cow_blocks(self.blocks.cow_range(
+                    r.rid, r.prefill_pos, r.prefill_pos + take))
 
         # batch same-size chunks into one multi-row graph; first chunks
         # carrying extras (image/audio embeddings differ per request) run
@@ -562,6 +626,11 @@ class Engine:
         self.prefill_tokens_trace.append(sum(t for _, _, t in plan))
         for _, r, take in plan:
             r.prefill_pos += take
+            if self.prefix:
+                # the chunk's K/V is in the pool: register its full blocks
+                # in the prefix index (DESIGN §10)
+                self.blocks.commit_prefill(r.rid, r.prompt_tokens,
+                                           r.prefill_pos)
         # promote finished lanes (lane-index order: deterministic) into the
         # decode region: paged mode keeps the pinned row — an O(1)
         # bookkeeping move, zero tensor copies (DESIGN §9); contiguous mode
@@ -593,6 +662,10 @@ class Engine:
 
     # -- internals ---------------------------------------------------------------
     def _prefill_request(self, r: Request):
+        # admission may have evicted cached blocks into this request's
+        # table: their stale pos rows must be cleared before the first
+        # attention read over the table (DESIGN §10)
+        self._drain_released()
         if self.paged:
             slot = self._free_slots.pop()
             r.slot = slot
@@ -608,9 +681,14 @@ class Engine:
         last_logits = None
         # exact-size chunks: stateful families (SSM conv/recurrence) must not
         # see pad tokens — full chunks + one exact-size tail call (jit caches
-        # one graph per distinct tail length)
-        pieces = [(s, toks[s:s + chunk]) for s in range(0, len(toks), chunk)]
+        # one graph per distinct tail length). A shared prefix (DESIGN §10)
+        # is already resident in mapped blocks: prefill the suffix only.
+        start0 = r.cached_prefix_len if self.prefix else 0
+        pieces = [(s, toks[s:s + chunk]) for s in range(start0, len(toks), chunk)]
         if self.paged:
+            if self.prefix:
+                self._cow_blocks(self.blocks.cow_range(r.rid, start0,
+                                                       len(toks)))
             tables = self._tables_for([r])
             rows = jnp.array([slot], jnp.int32)
             for start, piece in pieces:
@@ -621,6 +699,8 @@ class Engine:
                 logits, self.cache = self._prefill_paged_jit(
                     self.params, tt, pos, tables, rows, self.cache, ex)
                 last_logits = logits[0, len(piece) - 1]
+            if self.prefix:
+                self.blocks.commit_prefill(r.rid, toks, len(toks))
         else:
             sub = cache_take(self.cache, slot, 1)
             for start, piece in pieces:
@@ -655,6 +735,9 @@ class Engine:
         r.state = RequestState.WAITING
         r.output_tokens.clear()
         r.tbt_samples.clear()
+        # the recompute pass re-probes the prefix index from scratch — the
+        # request's own just-freed blocks are prime cache hits (DESIGN §10)
+        r.cached_prefix_len = 0
         # recompute: the next serving pass re-attributes TTFT from scratch
         # (a stale prefill_start_time would count the first life — decode
         # included — as prefill service)
@@ -672,6 +755,11 @@ class Engine:
         self.preemptions += 1
 
     def _decode_once(self, extra_ms: float = 0.0):
+        if self.prefix:
+            # COW guard on the position each decode writes (DESIGN §10)
+            for r in self.active:
+                self._cow_blocks(self.blocks.cow_range(
+                    r.rid, r.context_len - 1, r.context_len))
         n = len(self.active)
         ge = [b for b in self.buckets if b >= n]
         bucket = min(ge) if ge else self.max_slots
@@ -750,6 +838,8 @@ class Engine:
         for r in grow_failed:
             if r in self.active:
                 self._evict(self.active.index(r), r)
+        # decode grows may have reclaimed cached blocks for reuse
+        self._drain_released()
 
     # -- metrics ---------------------------------------------------------------
     def summary(self) -> Dict[str, float]:
@@ -771,6 +861,17 @@ class Engine:
             # contiguous-layout row copies; 0 under paged_kv (DESIGN §9)
             "copy_rows": float(self.copy_rows),
             "copy_bytes": float(self.copy_bytes),
+            # prefix sharing (DESIGN §10)
+            "prefix_hit_rate": self.blocks.prefix_hit_rate,
+            "prefix_hit_tokens": float(self.blocks.prefix_hit_tokens),
+            "cached_blocks": float(self.blocks.cached_blocks),
+            "cache_evictions": float(self.blocks.cache_evictions),
+            "logical_used_tokens": float(self.blocks.logical_used_tokens),
+            "physical_used_tokens": float(self.blocks.physical_used_tokens),
+            "logical_used_bytes": float(self.mem.tokens_to_bytes(
+                self.blocks.logical_used_tokens)),
+            "physical_used_bytes": float(self.mem.tokens_to_bytes(
+                self.blocks.physical_used_tokens)),
             # PD fusion (DESIGN §6)
             "prefill_lane_occupancy": (sum(occ) / len(occ)) if occ else 0.0,
             "prefill_tokens": float(self.tel.prefill_tokens_total),

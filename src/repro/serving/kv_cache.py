@@ -7,31 +7,99 @@ in physical pool block `tables[r][p // block_size]`, and the engine ships
 the tables to the paged decode kernel each step. With the legacy
 contiguous cache (DESIGN §3) the same accounting runs as bookkeeping only,
 so the scheduler sees the identical free-token signal either way.
+
+With `prefix_cache=True` (DESIGN §10) the allocator grows vLLM-style
+automatic prefix sharing on top of the paged pool: per-block refcounts, a
+content-hash → block-id index over *full* prompt blocks, and `free()`
+becomes a decref — blocks whose refcount hits zero stay resident as an
+evictable LRU cache until the free list runs dry. Admission maps matched
+blocks into a new request's table with zero copies and prefills only the
+unmatched suffix.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, List
+import hashlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+def prefix_cache_supported(cfg) -> bool:
+    """Prefix sharing reuses attention K/V blocks only. Families carrying
+    per-slot sequential state (SSM/RG-LRU conv state, enc-dec/VLM cross-KV)
+    cannot skip prefill of a shared prefix — their state depends on every
+    prefix token — and windowed attention evicts the very blocks a later
+    request would want to share (DESIGN §10)."""
+    from repro.config.base import ArchFamily, AttentionKind
+    return (cfg.family in (ArchFamily.DENSE, ArchFamily.MOE)
+            and cfg.attention == AttentionKind.FULL)
 
 
 @dataclasses.dataclass
 class BlockManager:
     total_tokens: int                 # eta: pool capacity in tokens
     block_size: int = 16
+    prefix_cache: bool = False        # ref-counted prefix sharing (DESIGN §10)
 
     def __post_init__(self):
         self.num_blocks = self.total_tokens // self.block_size
         self._free: List[int] = list(range(self.num_blocks))
         self.tables: Dict[int, List[int]] = {}     # rid -> block ids
+        # prefix-sharing state (DESIGN §10); maintained (cheaply) even with
+        # prefix_cache=False so the invariants below hold unconditionally
+        self.ref: Dict[int, int] = {}              # block -> refcount (>=1)
+        self._hash_of: Dict[int, bytes] = {}       # block -> registered hash
+        self._index: Dict[bytes, int] = {}         # content hash -> block
+        # ref==0 registered blocks, resident + evictable, LRU order
+        self._cached: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()
+        # per-rid commit cursor: (#full blocks hashed, chain hash)
+        self._commit: Dict[int, Tuple[int, bytes]] = {}
+        # blocks evicted-for-reuse whose pos-pool rows the paged engine
+        # must clear before their new tenant's first step (DESIGN §10)
+        self._released: List[int] = []
+        self.prefix_hit_tokens = 0     # tokens served from shared blocks
+        self.prefix_query_tokens = 0   # prompt tokens probed at admission
+        self.cache_evictions = 0       # cached blocks reclaimed for reuse
+        self.cow_copies = 0            # copy-on-write block duplications
 
     # -- queries ------------------------------------------------------------
     @property
     def free_blocks(self) -> int:
-        return len(self._free)
+        """Reclaimable blocks: truly free + evictable cached (ref == 0).
+        This is the controller's free signal — cached blocks are reclaimed
+        on demand by `allocate`, so admission/grow headroom must count them
+        (DESIGN §10)."""
+        return len(self._free) + len(self._cached)
 
     @property
     def free_tokens(self) -> int:
         return self.free_blocks * self.block_size
+
+    @property
+    def physical_free_blocks(self) -> int:
+        """Blocks holding no resident content at all."""
+        return len(self._free)
+
+    @property
+    def cached_blocks(self) -> int:
+        """Resident-but-unreferenced blocks (the evictable prefix cache)."""
+        return len(self._cached)
+
+    @property
+    def logical_used_tokens(self) -> int:
+        """Per-request footprints summed — shared blocks counted once per
+        referencing request (what a no-sharing allocator would charge)."""
+        return sum(len(t) for t in self.tables.values()) * self.block_size
+
+    @property
+    def physical_used_tokens(self) -> int:
+        """Deduped usage: distinct referenced blocks (DESIGN §10)."""
+        return (self.num_blocks - self.free_blocks) * self.block_size
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_hit_tokens / max(self.prefix_query_tokens, 1)
 
     def used_tokens_of(self, rid: int) -> int:
         return len(self.tables.get(rid, ())) * self.block_size
@@ -63,6 +131,144 @@ class BlockManager:
             cap = min(cap, max_blocks)
         return "reject" if blocks_needed > cap else "defer"
 
+    # -- prefix sharing (DESIGN §10) ------------------------------------------
+    _CHAIN_ROOT = b""
+
+    @staticmethod
+    def _chain(prev: bytes, block_tokens: Sequence[int]) -> bytes:
+        """Content hash of one full block, chained on the whole prefix so a
+        block matches only when every token before it matched too. sha256,
+        not the builtin hash(): int-tuple hashes ignore PYTHONHASHSEED, so
+        a 64-bit collision would be deterministic and adversarially
+        constructible — and a collision here maps another prompt's physical
+        KV into the request (the vLLM content-hash lesson)."""
+        h = hashlib.sha256(prev)
+        h.update(",".join(map(str, block_tokens)).encode())
+        return h.digest()
+
+    def _pop_block(self) -> Optional[int]:
+        """Take a physical block: prefer the free list, else evict the
+        least-recently-used cached block (deregistering its content and
+        queueing it for a pos-row clear)."""
+        if self._free:
+            return self._free.pop()
+        if self._cached:
+            b, _ = self._cached.popitem(last=False)   # LRU end
+            h = self._hash_of.pop(b, None)
+            if h is not None and self._index.get(h) == b:
+                del self._index[h]
+            self._released.append(b)
+            self.cache_evictions += 1
+            return b
+        return None
+
+    def acquire_prefix(self, rid: int, token_ids: Sequence[int]) -> int:
+        """Match `token_ids` against the prefix index and map every shared
+        full block into `rid`'s (empty) table with zero copies — resurrect
+        cached blocks, bump refcounts. Returns the number of cached tokens;
+        the caller prefills only the suffix. On a FULL-prompt hit the last
+        matched block is demoted (left unmatched) so the suffix is never
+        empty: the engine must still compute last-position logits to sample
+        the first output token, and re-prefilling that whole block keeps
+        shared blocks write-free (no COW on the hot path). Roll back an
+        admission refusal with `free(rid)`; count hit-rate telemetry with
+        `note_prefix_query` only once the request is actually admitted."""
+        if not self.prefix_cache or self.tables.get(rid):
+            return 0
+        bs = self.block_size
+        matched: List[int] = []
+        h = self._CHAIN_ROOT
+        for k in range(len(token_ids) // bs):
+            nh = self._chain(h, token_ids[k * bs:(k + 1) * bs])
+            b = self._index.get(nh)
+            if b is None:
+                break
+            matched.append(b)
+            h = nh
+        if matched and len(matched) * bs == len(token_ids):
+            matched.pop()              # full hit: demote the tail block
+        if not matched:
+            return 0
+        tbl = self.tables.setdefault(rid, [])
+        for b in matched:
+            if b in self._cached:
+                del self._cached[b]    # resurrect from the evictable cache
+            self.ref[b] = self.ref.get(b, 0) + 1
+            tbl.append(b)
+        self._commit[rid] = (len(matched), self._hash_of[matched[-1]])
+        return len(matched) * bs
+
+    def note_prefix_query(self, n_query: int, n_hit: int) -> None:
+        """Hit-rate telemetry, counted on successful admission only (a
+        deferred request re-probes every interval and would skew the rate —
+        and break engine-vs-sim hit-rate parity, DESIGN §10)."""
+        self.prefix_query_tokens += n_query
+        self.prefix_hit_tokens += n_hit
+
+    def commit_prefill(self, rid: int, token_ids: Sequence[int],
+                       n_tokens: int) -> None:
+        """Register every full block of `token_ids[:n_tokens]` whose
+        content is now written to the pool (call AFTER the prefill chunk
+        lands). First writer wins: content already indexed elsewhere leaves
+        this request's copy private."""
+        if not self.prefix_cache:
+            return
+        bs = self.block_size
+        tbl = self.tables.get(rid, ())
+        k, h = self._commit.get(rid, (0, self._CHAIN_ROOT))
+        n_tokens = min(n_tokens, len(token_ids))
+        while (k + 1) * bs <= n_tokens and k < len(tbl):
+            h = self._chain(h, token_ids[k * bs:(k + 1) * bs])
+            b = tbl[k]
+            if h not in self._index and b not in self._hash_of:
+                self._index[h] = b
+                self._hash_of[b] = h
+            k += 1
+        self._commit[rid] = (k, h)
+
+    def cow_range(self, rid: int, start_pos: int,
+                  end_pos: int) -> List[Tuple[int, int]]:
+        """Copy-on-write guard for a token-position write range: any shared
+        (refcount > 1) block about to be written is replaced by a private
+        copy in the table. Returns [(src, dst)] pairs whose pool contents
+        the paged engine must copy (DESIGN §10). Suffix-aligned mapping +
+        full-hit demotion keep this empty on the steady-state path; it
+        exists so a shared block can never be clobbered by construction."""
+        if not self.prefix_cache or end_pos <= start_pos:
+            return []
+        tbl = self.tables.get(rid)
+        if not tbl:
+            return []
+        bs = self.block_size
+        out: List[Tuple[int, int]] = []
+        for k in range(start_pos // bs, min(-(-end_pos // bs), len(tbl))):
+            b = tbl[k]
+            if self.ref.get(b, 0) <= 1:
+                continue
+            nb = self._pop_block()
+            if nb is None:
+                raise RuntimeError("COW with an exhausted pool: caller must "
+                                   "hold free headroom before writing")
+            if nb in self._released:
+                # the engine is about to copy valid K/V *and pos* into this
+                # block — a queued pos-row clear would wipe the copy and
+                # mask the whole block from attention
+                self._released.remove(nb)
+            self.ref[b] -= 1
+            self.ref[nb] = 1
+            tbl[k] = nb
+            # the private copy diverges from the registered content hash
+            out.append((b, nb))
+            self.cow_copies += 1
+        return out
+
+    def take_released(self) -> List[int]:
+        """Drain blocks evicted-for-reuse since the last call; the paged
+        engine clears their pos-pool rows so the new tenant never sees the
+        cached tenant's stale positions (DESIGN §10)."""
+        out, self._released = self._released, []
+        return out
+
     # -- mutations ------------------------------------------------------------
     def allocate(self, rid: int, cur_tokens: int, new_tokens: int) -> bool:
         n = self.blocks_needed(cur_tokens, new_tokens, rid)
@@ -70,16 +276,39 @@ class BlockManager:
             return False
         tbl = self.tables.setdefault(rid, [])
         for _ in range(n):
-            tbl.append(self._free.pop())
+            b = self._pop_block()
+            self.ref[b] = 1
+            tbl.append(b)
         return True
 
     def free(self, rid: int) -> List[int]:
-        """Release a request's blocks; returns the freed physical ids so the
-        paged engine can clear their position-pool rows (DESIGN §9)."""
-        freed = self.tables.pop(rid, [])
-        self._free.extend(freed)
+        """Release a request's blocks — a decref under prefix sharing.
+        Registered blocks whose refcount hits zero stay resident in the
+        evictable LRU cache; the rest go back to the free list. Returns the
+        ids actually freed so the paged engine can clear their position-pool
+        rows (cached blocks keep theirs — their content must stay readable
+        when re-mapped, DESIGN §9/§10)."""
+        freed: List[int] = []
+        for b in self.tables.pop(rid, []):
+            r = self.ref.get(b, 1) - 1
+            if r > 0:
+                self.ref[b] = r
+                continue
+            self.ref.pop(b, None)
+            if self.prefix_cache and b in self._hash_of:
+                self._cached[b] = None          # most-recently-used end
+            else:
+                self._free.append(b)
+                freed.append(b)
+        self._commit.pop(rid, None)
         return freed
 
     def reset(self) -> None:
         self._free = list(range(self.num_blocks))
         self.tables.clear()
+        self.ref.clear()
+        self._hash_of.clear()
+        self._index.clear()
+        self._cached.clear()
+        self._commit.clear()
+        self._released.clear()

@@ -29,6 +29,10 @@ class Request:
     # state is FINISHED with no output, this flag tells the two apart
     rejected: bool = False
     prefill_pos: int = 0                         # chunked-prefill progress
+    # prefix sharing (DESIGN §10): prompt tokens served from shared blocks
+    # at admission — prefill starts at this offset and only the suffix is
+    # charged to the chunk budget
+    cached_prefix_len: int = 0
     output_tokens: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1                               # engine batch slot
     lane: int = -1                               # PD-fusion prefill lane (DESIGN §6)

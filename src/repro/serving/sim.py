@@ -28,7 +28,7 @@ from repro.core.lanes import lane_order, pack_chunks
 from repro.core.memory_model import MemoryModel
 from repro.core.telemetry import Telemetry
 from repro.serving.cost_model import CostModel
-from repro.serving.kv_cache import BlockManager
+from repro.serving.kv_cache import BlockManager, prefix_cache_supported
 from repro.serving.request import Request, RequestState
 
 
@@ -68,6 +68,11 @@ class SimResult:
     rejected: int = 0               # requests too large for the pool, dropped
     tbt_ms_mean: float = 0.0
     tbt_ms_p95: float = 0.0
+    # prefix sharing (DESIGN §10): admission-time shared-prefix telemetry
+    prefix_hit_tokens: int = 0
+    prefix_query_tokens: int = 0
+    prefix_hit_rate: float = 0.0
+    cache_evictions: int = 0
     ttft_p90_s: float = 0.0         # time-to-first-token (queueing + prefill)
     ttft_mean_s: float = 0.0
     # TTFT attribution (DESIGN §6): queue wait vs prefill service means
@@ -118,7 +123,13 @@ class ServingSimulator:
         eta = serve.kv_pool_tokens or self.mem.eta
         if eta == 0:  # attention-free: cap by request state instead
             eta = self.mem.max_requests_state_only() * serve.block_size
-        self.blocks = BlockManager(eta, serve.block_size)
+        # prefix sharing (DESIGN §10): same family gate as the engine so
+        # sim and engine hit rates stay comparable; the sim needs request
+        # token content (feed_tokens / shared-prefix workloads) to match
+        self.prefix = (serve.prefix_cache and prefix_cache_supported(cfg)
+                       and self.mem.bytes_per_token != 0)
+        self.blocks = BlockManager(eta, serve.block_size,
+                                   prefix_cache=self.prefix)
         self.tel = Telemetry(prior_mean_in=lengths.mean_in,
                              prior_mean_out=lengths.mean_out)
         self.policy = policy or make_policy(serve, self.mem)
@@ -158,12 +169,17 @@ class ServingSimulator:
             now=self.now,
             n_prefill=len(arrived) + len(self.pending_prefill),
             n_decode=len(self.running),
-            free_tokens=self.blocks.free_tokens)
+            free_tokens=self.blocks.free_tokens,
+            logical_used_tokens=self.blocks.logical_used_tokens,
+            physical_used_tokens=self.blocks.physical_used_tokens)
 
     def _admit(self, decision: BatchDecision):
         """Admission control: fill up to max_batch respecting the block pool."""
+        # engine-mirrored floor-bucket guard: rounding UP to the smallest
+        # compiled bucket must not admit past the controller's decision
         cap = bucketize(decision.max_batch, self.serve.batch_buckets) \
             if self.serve.batch_buckets else decision.max_batch
+        cap = min(cap, decision.max_batch)
         admitted = []
         for r in list(self.waiting):
             # engine-mirrored cap: running + prefill backlog + this batch
@@ -175,11 +191,22 @@ class ServingSimulator:
             need = r.context_len + 1  # context covers recompute re-prefill
             if self.mem.bytes_per_token == 0:
                 need = self.serve.block_size  # state-only families
+            # prefix sharing (DESIGN §10): engine-mirrored — map shared
+            # full prompt blocks first, gate on the suffix, roll back on
+            # refusal so hit rates stay engine-comparable
+            cached = 0
+            if self.prefix and r.prompt_tokens:
+                cached = self.blocks.acquire_prefix(r.rid, r.prompt_tokens)
+            have = len(self.blocks.tables.get(r.rid, ()))
+            nb = self.blocks.blocks_needed(0, need, r.rid)
+            mb = self.max_blocks - have if self.max_blocks else 0
             # shared engine/sim gate (DESIGN §7): vLLM 1% watermark +
             # unservable rejection live in BlockManager.admission_verdict
-            verdict = self.blocks.admission_verdict(
-                self.blocks.blocks_needed(0, need, r.rid), self.max_blocks)
+            verdict = "reject" if self.max_blocks and mb <= 0 and nb > 0 \
+                else self.blocks.admission_verdict(nb, mb)
             if verdict != "admit":
+                if cached:
+                    self.blocks.free(r.rid)
                 if verdict == "reject":
                     self.waiting.remove(r)
                     r.state = RequestState.FINISHED
@@ -189,11 +216,14 @@ class ServingSimulator:
                 self.res.oom_events += 1
                 break
             self.blocks.allocate(r.rid, 0, need)
+            if self.prefix:
+                self.blocks.note_prefix_query(r.prompt_len, cached)
+            r.cached_prefix_len = cached
             admitted.append(r)
         for r in admitted:
             self.waiting.remove(r)
             r.state = RequestState.PREFILLING
-            r.prefill_pos = 0
+            r.prefill_pos = r.cached_prefix_len
         return admitted
 
     def _preempt_if_needed(self):
@@ -211,6 +241,8 @@ class ServingSimulator:
             self.blocks.free(victim.rid)
             victim.state = RequestState.WAITING
             victim.prefill_pos = 0
+            # recompute re-probes the prefix index at re-admission (§10)
+            victim.cached_prefix_len = 0
             # engine-mirrored: re-attribute TTFT on the recompute pass
             victim.prefill_start_time = -1.0
             # vLLM recompute: generated tokens are REPLAYED as prefill (they
@@ -222,9 +254,12 @@ class ServingSimulator:
 
     # -- steps -------------------------------------------------------------------
     def _prefill_step(self, reqs: List[Request]):
-        # context_len covers recompute-after-preemption (prompt + kept output)
-        toks = sum(r.context_len for r in reqs)
-        ctx = toks / max(len(reqs), 1)
+        # context_len covers recompute-after-preemption (prompt + kept
+        # output); a shared prefix is already resident, so only suffix
+        # tokens are charged to the prefill cost — attention still reads
+        # the full context (DESIGN §10)
+        toks = sum(r.context_len - r.cached_prefix_len for r in reqs)
+        ctx = sum(r.context_len for r in reqs) / max(len(reqs), 1)
         for r in reqs:
             if r.prefill_start_time < 0:
                 r.prefill_start_time = self.now
@@ -233,6 +268,9 @@ class ServingSimulator:
         for r in reqs:
             r.state = RequestState.RUNNING
             r.first_token_time = self.now
+            if self.prefix and r.prompt_tokens:
+                self.blocks.commit_prefill(r.rid, r.prompt_tokens,
+                                           r.prompt_len)
             self.tel.on_first_token(r.prefill_start_time - r.arrival_time,
                                     self.now - r.prefill_start_time)
             self.running.append(r)
@@ -273,6 +311,9 @@ class ServingSimulator:
                 if r.prefill_start_time < 0:
                     r.prefill_start_time = self.now
                 r.prefill_pos += take
+                if self.prefix and r.prompt_tokens:
+                    self.blocks.commit_prefill(r.rid, r.prompt_tokens,
+                                               r.prefill_pos)
                 lane_tokens[j] = take
             pf_tokens = sum(lane_tokens.values())
             if lane_tokens:
@@ -348,6 +389,9 @@ class ServingSimulator:
                     self._prefill_step(admitted)
                 if self.running:
                     self._decode_step([], 0)
+            # no physical pos rows to clear in the sim — drain the
+            # eviction queue so it cannot grow for the run's lifetime
+            self.blocks.take_released()
         self.res.duration_s = self.now
         ttfts = sorted(r.first_token_time - r.arrival_time
                        for r in self._all if r.first_token_time >= 0)
@@ -374,4 +418,8 @@ class ServingSimulator:
             self.res.sla_attainment = self._sla_ok / self._sla_steps
         if self.res.batch_trace:
             self.res.mean_batch = sum(self.res.batch_trace) / len(self.res.batch_trace)
+        self.res.prefix_hit_tokens = self.blocks.prefix_hit_tokens
+        self.res.prefix_query_tokens = self.blocks.prefix_query_tokens
+        self.res.prefix_hit_rate = self.blocks.prefix_hit_rate
+        self.res.cache_evictions = self.blocks.cache_evictions
         return self.res

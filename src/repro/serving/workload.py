@@ -3,6 +3,14 @@
 Generators produce (arrival_time, prompt_len, output_len) streams for the
 simulator: Poisson baseline, square-wave bursts (traffic spikes), diurnal
 sinusoid, and replay from a JSONL trace file.
+
+`shared_prefix` produces token-level streams (arrival_time, prompt_tokens,
+output_len) for the prefix-sharing path (DESIGN §10): prompts draw a system
+prompt from a fixed pool and conversations re-arrive multi-turn, each next
+turn's prompt extending the previous turn's full transcript — the traffic
+shape where vLLM-style prefix caching pays off. The same stream drives the
+simulator (`feed_tokens`) and the real engine (`benchmarks/
+prefix_caching.py`), so hit rates are directly comparable.
 """
 from __future__ import annotations
 
@@ -14,7 +22,8 @@ from typing import Iterator, List, Tuple
 from repro.serving.request import Request
 from repro.serving.sim import LengthDist, ServingSimulator
 
-Arrival = Tuple[float, int, int]   # (t, l_in, l_out)
+Arrival = Tuple[float, int, int]            # (t, l_in, l_out)
+TokenArrival = Tuple[float, List[int], int]  # (t, prompt_tokens, l_out)
 
 
 def poisson(rate: float, n: int, lengths: LengthDist,
@@ -55,6 +64,66 @@ def diurnal(mean_rate: float, amplitude: float, period_s: float, n: int,
         out.append((t, li, lo))
         t += rng.expovariate(rate)
     return out
+
+
+def shared_prefix(rate: float, n: int, *, vocab_size: int = 1000,
+                  n_system_prompts: int = 4, system_len: int = 64,
+                  user_len: Tuple[int, int] = (8, 32),
+                  mean_out: float = 24.0, p_followup: float = 0.5,
+                  max_turns: int = 4, turn_gap_s: float = 5.0,
+                  seed: int = 0) -> List[TokenArrival]:
+    """Shared-system-prompt, multi-turn token workload (DESIGN §10).
+
+    Each conversation opens with one of `n_system_prompts` fixed system
+    prompts (`system_len` tokens, deterministic per pool entry) plus fresh
+    user tokens. With probability `p_followup` (up to `max_turns` turns) it
+    re-arrives `turn_gap_s` later, its next prompt = the previous prompt +
+    the previous turn's transcript (synthetic assistant tokens of the
+    sampled output length) + a new user utterance — the traffic where every
+    turn's prefill is dominated by already-seen tokens. Poisson arrivals at
+    `rate` for conversation openers; `n` total requests."""
+    rng = random.Random(seed)
+    pool = [[rng.randrange(vocab_size) for _ in range(system_len)]
+            for _ in range(n_system_prompts)]
+
+    def utterance():
+        return [rng.randrange(vocab_size)
+                for _ in range(rng.randint(*user_len))]
+
+    def out_len():
+        return max(1, int(rng.expovariate(1.0 / mean_out)))
+
+    out: List[TokenArrival] = []
+    t = 0.0
+    while len(out) < n:
+        prompt = list(rng.choice(pool)) + utterance()
+        turn_t = t
+        for turn in range(max_turns):
+            lo = out_len()
+            out.append((turn_t, list(prompt), lo))
+            if len(out) >= n or rng.random() >= p_followup:
+                break
+            # next turn extends the transcript: previous prompt + synthetic
+            # assistant reply + a fresh user utterance
+            prompt = prompt + [rng.randrange(vocab_size) for _ in range(lo)] \
+                + utterance()
+            turn_t += turn_gap_s * (1.0 + rng.random())
+        t += rng.expovariate(rate)
+    out.sort(key=lambda a: a[0])
+    return out[:n]
+
+
+def feed_tokens(sim: ServingSimulator, arrivals: List[TokenArrival]) -> None:
+    """Inject a token-level arrival stream (prefix-sharing workloads): the
+    sim's BlockManager matches/registers these prompts exactly like the
+    engine does (DESIGN §10)."""
+    base = len(sim._all)
+    new = [Request(rid=base + i, arrival_time=t, prompt_tokens=list(toks),
+                   true_output_len=lo, max_new_tokens=sim.serve.max_new_tokens)
+           for i, (t, toks, lo) in enumerate(arrivals)]
+    sim.waiting.extend(new)
+    sim.waiting.sort(key=lambda r: r.arrival_time)
+    sim._all.extend(new)
 
 
 def save_trace(path: str, arrivals: List[Arrival]) -> None:

@@ -19,9 +19,12 @@ def mem(budget_gb=64, eps=0.05):
 
 
 def snap(**kw):
+    # tbt_samples > 0: the window is warm unless a test says otherwise
+    # (BatchingSLA holds its window on a cold TBT window)
     d = dict(n_prefill_waiting=10, n_decode_running=5, mean_in=128.0,
              var_in=100.0, mean_out=128.0, var_out=400.0, tbt_ms=40.0,
-             mean_batch=64.0, arrival_rate=5.0, free_tokens=10_000, now=0.0)
+             tbt_samples=16, mean_batch=64.0, arrival_rate=5.0,
+             free_tokens=10_000, now=0.0)
     d.update(kw)
     return TelemetrySnapshot(**d)
 
@@ -126,17 +129,75 @@ def test_alg2_tightens_in_band():
     assert abs(d.max_batch - 100) <= 16
 
 
-@given(st.lists(st.tuples(st.floats(1, 200), st.integers(1, 256)),
+def test_alg2_cold_start_holds_window():
+    """Pre-fix, an empty TBT window (tau == 0.0) read as "headroom" every
+    interval and ratcheted the window toward b_max before a single decode
+    step had been measured. With zero samples the window must hold and the
+    midpoint be emitted."""
+    cfg = slacfg()
+    pol = BatchingSLA(cfg)
+    lo, hi = pol.b_low, pol.b_high
+    mid = (lo + hi) // 2
+    for _ in range(50):
+        d = pol.step(snap(tbt_ms=0.0, tbt_samples=0, mean_batch=0.0,
+                          n_decode_running=0))
+        assert (pol.b_low, pol.b_high) == (lo, hi)
+        assert d.max_batch == mid
+    # first real sample: updates resume
+    pol.step(snap(tbt_ms=200.0, tbt_samples=1, mean_batch=mid,
+                  n_decode_running=0))
+    assert (pol.b_low, pol.b_high) != (lo, hi)
+
+
+def test_alg2_cold_start_respects_running_floor():
+    pol = BatchingSLA(slacfg())
+    d = pol.step(snap(tbt_ms=0.0, tbt_samples=0, n_decode_running=200))
+    assert d.max_batch >= 200
+
+
+@given(st.lists(st.tuples(st.floats(1, 200), st.integers(0, 256),
+                          st.integers(0, 4)),
                 min_size=1, max_size=50))
 @settings(max_examples=100, deadline=None)
 def test_alg2_invariants(seq):
-    """Window ordering + bounds hold under any latency/batch feedback."""
+    """b_min <= b_low <= b_high <= b_max holds under ANY tau/batch feedback
+    sequence, including cold-window intervals."""
     cfg = slacfg()
     pol = BatchingSLA(cfg)
-    for tbt, b in seq:
-        d = pol.step(snap(tbt_ms=tbt, mean_batch=b, n_decode_running=0))
+    for tbt, b, samples in seq:
+        d = pol.step(snap(tbt_ms=tbt, tbt_samples=samples, mean_batch=b,
+                          n_decode_running=0))
         assert cfg.b_min <= d.max_batch <= cfg.b_max
-        assert pol.b_low <= pol.b_high
+        assert cfg.b_min <= pol.b_low <= pol.b_high <= cfg.b_max
+
+
+@given(st.floats(55, 500), st.integers(1, 8), st.integers(0, 8))
+@settings(max_examples=60, deadline=None)
+def test_alg2_midpoint_monotone_over_sla(tau, alpha, delta):
+    """Sustained over-SLA regime with feedback-consistent b-bar: the
+    midpoint never rises (from a fresh window)."""
+    cfg = slacfg(alpha=alpha, delta=delta)
+    pol = BatchingSLA(cfg)
+    b = (pol.b_low + pol.b_high) // 2
+    for _ in range(30):
+        nb = pol.step(snap(tbt_ms=tau, mean_batch=b,
+                           n_decode_running=0)).max_batch
+        assert nb <= b
+        b = nb
+
+
+@given(st.floats(1, 45), st.integers(1, 8), st.integers(0, 8))
+@settings(max_examples=60, deadline=None)
+def test_alg2_midpoint_monotone_under_sla(tau, alpha, delta):
+    """Sustained under-SLA regime: the midpoint never falls."""
+    cfg = slacfg(alpha=alpha, delta=delta)
+    pol = BatchingSLA(cfg)
+    b = (pol.b_low + pol.b_high) // 2
+    for _ in range(30):
+        nb = pol.step(snap(tbt_ms=tau, mean_batch=b,
+                           n_decode_running=0)).max_batch
+        assert nb >= b
+        b = nb
 
 
 def test_alg2_converges_to_sla_batch():
@@ -189,6 +250,53 @@ def test_bucketize(b):
     out = bucketize(b, buckets)
     assert out in buckets
     assert out <= b or b < 8
+
+
+def test_floor_bucket_never_exceeds_decision_sim():
+    """bucketize rounds UP to the smallest compiled bucket when b_t is
+    below it — the graph pads, but ADMISSION must still respect the
+    controller's decision. Pre-fix the sim ran a larger batch than
+    BatchDecision.max_batch allowed."""
+    from repro.serving.cost_model import CostModel, PROFILES
+    from repro.serving.sim import LengthDist, ServingSimulator
+
+    cfg = get_config("granite-3-8b")
+    serve = ServeConfig(policy="static", b_max=2, max_new_tokens=4,
+                        kv_pool_tokens=4096, batch_buckets=(4, 8))
+    sim = ServingSimulator(cfg, serve,
+                           CostModel(cfg, PROFILES["a100x8"]),
+                           LengthDist(mean_in=8, mean_out=4, fixed=True),
+                           seed=0)
+    sim.add_requests(6)
+    res = sim.run()
+    assert res.finished == 6
+    assert max(res.batch_trace) <= 2
+
+
+def test_floor_bucket_never_exceeds_decision_engine():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models.model import build_model
+    from repro.serving.engine import Engine
+
+    cfg = get_config("granite-3-8b", "reduced")
+    m = build_model(cfg, dtype=jnp.float32)
+    params = m.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    serve = ServeConfig(policy="static", b_max=2, max_new_tokens=3,
+                        kv_pool_tokens=2048, batch_buckets=(4, 8))
+    eng = Engine(m, params, serve, max_context=64, buckets=(1, 2, 4, 8),
+                 prefill_chunk=8)
+    hs = [eng.submit(list(map(int, rng.randint(0, cfg.vocab_size, 6))),
+                     max_new_tokens=3) for _ in range(5)]
+    peak = 0
+    while eng.step():
+        peak = max(peak, len(eng.active) + len(eng.prefilling))
+    assert eng.total_finished == 5
+    assert peak <= 2
+    assert all(len(h.output_tokens) == 3 for h in hs)
 
 
 def test_chunked_prefill_budget():

@@ -55,3 +55,76 @@ def test_never_leaks_or_double_allocates(ops):
     # no block owned twice
     all_blocks = [b for t in bm.tables.values() for b in t] + bm._free
     assert len(all_blocks) == len(set(all_blocks)) == bm.num_blocks
+
+
+# ---------------------------------------------------------------------------
+# prefix-sharing refcount invariants (DESIGN §10)
+
+
+def _check_refcount_invariants(bm: BlockManager):
+    """Every block is in exactly one of {free list, evictable cache,
+    referenced-by-tables}; refcounts equal table occurrences; cached blocks
+    are never referenced (evict-while-referenced impossible by state)."""
+    occurrences = {}
+    for t in bm.tables.values():
+        for b in t:
+            occurrences[b] = occurrences.get(b, 0) + 1
+    referenced = set(occurrences)
+    free = set(bm._free)
+    cached = set(bm._cached)
+    assert not (free & cached) and not (free & referenced) \
+        and not (cached & referenced)
+    assert len(free) + len(cached) + len(referenced) == bm.num_blocks
+    assert len(bm._free) == len(free)          # no duplicates on free list
+    for b, n in occurrences.items():
+        assert bm.ref[b] == n
+    # distinct-referenced + distinct-free partition == pool (the "sum of
+    # refcounts" invariant, with shared blocks counted once)
+    assert bm.free_blocks == len(free) + len(cached)
+
+
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 4),
+                          st.integers(1, 40)), max_size=60))
+@settings(max_examples=120, deadline=None)
+def test_prefix_refcount_invariants(ops):
+    """Random acquire/commit/allocate/free/COW interleavings can never
+    leak a block, double-own a block, or evict a referenced block."""
+    bm = BlockManager(total_tokens=320, block_size=16, prefix_cache=True)
+    prompts = {}
+    for rid, op, n in ops:
+        if op == 0:          # admit: prefix-match then allocate the rest
+            if rid in bm.tables:
+                continue
+            p = toks(16 + n, seed=n % 7)
+            cached = bm.acquire_prefix(rid, p)
+            if bm.allocate(rid, cached, len(p) + 1 - cached):
+                prompts[rid] = p
+            else:
+                bm.free(rid)
+                prompts.pop(rid, None)
+        elif op == 1:        # prefill progress: register full blocks
+            if rid in prompts:
+                bm.commit_prefill(rid, prompts[rid], min(n, len(prompts[rid])))
+        elif op == 2:        # decode grow
+            if rid in bm.tables:
+                bm.allocate(rid, len(bm.tables[rid]) * 16, 1)
+        elif op == 3:        # finish/evict: decref
+            bm.free(rid)
+            prompts.pop(rid, None)
+        else:                # double-free must be harmless
+            bm.free(rid)
+            bm.free(rid)
+            prompts.pop(rid, None)
+        if rid in bm.tables and bm.physical_free_blocks + bm.cached_blocks:
+            bm.cow_range(rid, 0, min(n, len(bm.tables[rid]) * 16))
+        _check_refcount_invariants(bm)
+    for rid in list(bm.tables):
+        bm.free(rid)
+    _check_refcount_invariants(bm)
+    assert bm.free_blocks == bm.num_blocks     # nothing leaked
+
+
+def toks(n, seed=0):
+    import random
+    rng = random.Random(seed)
+    return [rng.randrange(997) for _ in range(n)]

@@ -1,0 +1,353 @@
+"""Ref-counted prefix sharing on the paged KV pool (DESIGN §10).
+
+Covers the tentpole: BlockManager prefix index / refcount / LRU-cache
+semantics, COW, zero-copy shared-block mapping, engine prefix-on vs -off
+bitwise equivalence, engine-vs-sim hit-rate parity, eviction-then-reuse
+pos hygiene, and logical-vs-physical telemetry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import ServeConfig
+from repro.config.registry import get_config
+from repro.models.model import build_model
+from repro.serving.engine import Engine
+from repro.serving.kv_cache import BlockManager, prefix_cache_supported
+
+
+def setup_model(arch="granite-3-8b"):
+    cfg = get_config(arch, "reduced")
+    m = build_model(cfg, dtype=jnp.float32)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+# ---------------------------------------------------------------------------
+# BlockManager unit semantics
+
+
+def toks(n, seed=0):
+    rng = np.random.RandomState(seed)
+    return list(map(int, rng.randint(0, 997, size=n)))
+
+
+def test_match_maps_full_blocks_zero_alloc():
+    bm = BlockManager(total_tokens=320, block_size=16, prefix_cache=True)
+    p = toks(40)                      # 2 full blocks + 8-token tail
+    bm.allocate(1, 0, 41)
+    bm.commit_prefill(1, p, 40)
+    free_before = bm.free_blocks
+    cached = bm.acquire_prefix(2, p)
+    assert cached == 32               # the partial tail block never matches
+    assert bm.tables[2] == bm.tables[1][:2]
+    assert bm.free_blocks == free_before       # zero new blocks consumed
+    assert all(bm.ref[b] == 2 for b in bm.tables[2])
+
+
+def test_full_hit_demotes_tail_block():
+    """An exact-prompt hit must leave a non-empty suffix: the engine still
+    needs last-position logits to sample the first output token."""
+    bm = BlockManager(total_tokens=320, block_size=16, prefix_cache=True)
+    p = toks(32)                      # exactly 2 full blocks
+    bm.allocate(1, 0, 33)
+    bm.commit_prefill(1, p, 32)
+    cached = bm.acquire_prefix(2, p)
+    assert cached == 16               # last matched block demoted
+    assert len(bm.tables[2]) == 1
+
+
+def test_divergent_prompt_stops_at_first_mismatch():
+    bm = BlockManager(total_tokens=320, block_size=16, prefix_cache=True)
+    p = toks(48)
+    bm.allocate(1, 0, 49)
+    bm.commit_prefill(1, p, 48)
+    q = list(p)
+    q[20] += 1                        # diverge inside block 1
+    assert bm.acquire_prefix(2, q) == 16      # only block 0 matches
+    bm.free(2)
+    r = list(p[:16]) + toks(16, seed=9)       # same block 0, new block 1
+    assert bm.acquire_prefix(3, r) == 16
+
+
+def test_free_is_decref_and_blocks_stay_resident():
+    bm = BlockManager(total_tokens=160, block_size=16, prefix_cache=True)
+    p = toks(40)
+    bm.allocate(1, 0, 41)
+    bm.commit_prefill(1, p, 40)
+    bm.acquire_prefix(2, p)
+    freed = bm.free(1)
+    # shared blocks survive (ref 2 -> 1); only the private tail frees
+    assert all(b not in freed for b in bm.tables[2])
+    assert all(bm.ref[b] == 1 for b in bm.tables[2])
+    # now the last ref drops: registered blocks become evictable cache,
+    # NOT free-list entries — and are still matchable
+    bm.free(2)
+    assert bm.cached_blocks == 2
+    assert bm.acquire_prefix(3, p) == 32      # resurrected from the cache
+    assert bm.cached_blocks == 0
+
+
+def test_lru_eviction_under_pressure_and_stale_pos_release():
+    bm = BlockManager(total_tokens=64, block_size=16, prefix_cache=True)  # 4 blocks
+    a, b = toks(32, seed=1), toks(32, seed=2)
+    bm.allocate(1, 0, 32); bm.commit_prefill(1, a, 32); bm.free(1)
+    bm.allocate(2, 0, 32); bm.commit_prefill(2, b, 32); bm.free(2)
+    assert bm.cached_blocks == 4 and bm.physical_free_blocks == 0
+    # allocating 2 blocks evicts the LRU entries (request 1's, the oldest)
+    assert bm.allocate(3, 0, 32)
+    assert sorted(bm.take_released()) and bm.cache_evictions == 2
+    assert bm.acquire_prefix(4, a) == 0       # a was evicted
+    assert bm.acquire_prefix(5, b) == 16      # b survived (full-hit demote)
+
+
+def test_cow_gives_private_copy_to_writer():
+    bm = BlockManager(total_tokens=160, block_size=16, prefix_cache=True)
+    p = toks(32)
+    bm.allocate(1, 0, 33)
+    bm.commit_prefill(1, p, 32)
+    bm.acquire_prefix(2, p)                   # block 0 shared, ref == 2
+    shared = bm.tables[2][0]
+    pairs = bm.cow_range(2, 0, 8)             # write into the shared block
+    assert pairs and pairs[0][0] == shared
+    assert bm.tables[2][0] != shared
+    assert bm.ref[shared] == 1 and bm.ref[bm.tables[2][0]] == 1
+    assert bm.cow_copies == 1
+    # unshared writes are free of COW
+    assert bm.cow_range(1, 0, 32) == []
+
+
+def test_cow_destination_not_queued_for_pos_clear():
+    """A COW dst taken via cache eviction receives a full K/V+pos copy —
+    it must NOT sit in the released queue, or the engine's next drain
+    would wipe the copied pos rows and mask the block from attention."""
+    bm = BlockManager(total_tokens=64, block_size=16, prefix_cache=True)  # 4 blocks
+    p = toks(32, seed=3)
+    bm.allocate(1, 0, 33)                     # 3 blocks
+    bm.commit_prefill(1, p, 32)
+    bm.acquire_prefix(2, p)                   # block 0 shared (ref 2)
+    # park registered content in the cache so _pop_block must evict
+    c = toks(16, seed=4)
+    bm.allocate(3, 0, 16)                     # the last free block
+    bm.commit_prefill(3, c, 16)
+    bm.free(3)                                # registered -> evictable cache
+    assert bm.physical_free_blocks == 0 and bm.cached_blocks == 1
+    bm.take_released()
+    pairs = bm.cow_range(2, 0, 8)
+    assert bm.cache_evictions == 1            # dst came via eviction
+    assert pairs
+    dst = pairs[0][1]
+    assert dst not in bm.take_released()
+
+
+def test_chain_hash_is_content_exact():
+    """sha256 chain: same tokens at a different prefix never match."""
+    bm = BlockManager(total_tokens=320, block_size=16, prefix_cache=True)
+    a, b = toks(16, seed=1), toks(16, seed=2)
+    bm.allocate(1, 0, 33)
+    bm.commit_prefill(1, a + b, 32)
+    # b's content after a different first block must miss
+    assert bm.acquire_prefix(2, b + b) == 0
+    assert bm.acquire_prefix(3, a + b) == 16  # true prefix still hits
+
+
+def test_logical_vs_physical_usage():
+    bm = BlockManager(total_tokens=320, block_size=16, prefix_cache=True)
+    p = toks(40)
+    bm.allocate(1, 0, 41)                     # 3 blocks
+    bm.commit_prefill(1, p, 40)
+    bm.acquire_prefix(2, p)                   # maps 2 shared
+    bm.allocate(2, 8 * 4, 9)                  # 1 private block for the tail
+    assert bm.logical_used_tokens == 6 * 16   # 3 + 3 per-request footprints
+    assert bm.physical_used_tokens == 4 * 16  # deduped: 3 + 1 distinct
+    assert bm.free_tokens == (20 - 4) * 16
+
+
+def test_family_gate():
+    assert prefix_cache_supported(get_config("granite-3-8b"))
+    assert not prefix_cache_supported(get_config("mamba2-2.7b"))
+    assert not prefix_cache_supported(get_config("recurrentgemma-9b"))
+
+
+# ---------------------------------------------------------------------------
+# engine-level equivalence
+
+
+@pytest.mark.parametrize("chunked", [False, True])
+def test_engine_prefix_on_off_bitwise_identical(chunked):
+    """Shared-system-prompt burst: decoded tokens bitwise-identical with
+    prefix caching on vs off, zero copy bytes for shared-block mapping, and
+    a nonzero hit rate when on."""
+    cfg, m, params = setup_model()
+    rng = np.random.RandomState(0)
+    system = list(map(int, rng.randint(0, cfg.vocab_size, size=40)))
+    prompts = [system + list(map(int, rng.randint(0, cfg.vocab_size,
+                                                  size=6 + i)))
+               for i in range(4)]
+
+    def run(prefix):
+        serve = ServeConfig(policy="static", b_max=4, max_new_tokens=5,
+                            kv_pool_tokens=2048, chunked_prefill=chunked,
+                            chunk_budget_tokens=16, n_prefill_lanes=2,
+                            paged_kv=True, prefix_cache=prefix)
+        eng = Engine(m, params, serve, max_context=128, buckets=(1, 2, 4),
+                     prefill_chunk=8)
+        hs = [eng.submit(prompts[0], max_new_tokens=5)]
+        eng.run()                     # wave 1 warms the index
+        hs += [eng.submit(p, max_new_tokens=5) for p in prompts]
+        eng.run()
+        assert eng.total_finished == 5
+        return [h.output_tokens for h in hs], eng
+
+    out_off, _ = run(False)
+    out_on, eng = run(True)
+    assert out_off == out_on
+    assert eng.copy_rows == 0 and eng.copy_bytes == 0
+    s = eng.summary()
+    assert s["prefix_hit_tokens"] >= 2 * 16   # wave-2 identical prompt hits
+    assert s["prefix_hit_rate"] > 0
+    # every still-shared/cached block accounted: logical >= physical
+    assert s["logical_used_tokens"] >= s["physical_used_tokens"]
+
+
+@pytest.mark.parametrize("chunked", [False, True])
+def test_engine_eviction_reuse_keeps_outputs_identical(chunked):
+    """Cache-evicted blocks are reused by new tenants: their stale pos rows
+    must be cleared BEFORE the tenant's first attention read (the
+    non-chunked path prefills inside the admission loop), or phantom keys
+    corrupt attention. Small pool, many distinct prompts, then a
+    re-arrival — outputs must match prefix-off."""
+    cfg, m, params = setup_model()
+    rng = np.random.RandomState(7)
+    prompts = [list(map(int, rng.randint(0, cfg.vocab_size, size=36)))
+               for _ in range(5)]
+
+    def run(prefix):
+        serve = ServeConfig(policy="static", b_max=2, max_new_tokens=4,
+                            kv_pool_tokens=128, block_size=16,
+                            chunked_prefill=chunked, chunk_budget_tokens=16,
+                            paged_kv=True, prefix_cache=prefix)
+        eng = Engine(m, params, serve, max_context=64, buckets=(1, 2),
+                     prefill_chunk=8)
+        outs = []
+        for p in prompts + [prompts[0]]:
+            h = eng.submit(p, max_new_tokens=4)
+            eng.run(max_steps=2000)
+            outs.append(h.output_tokens)
+        return outs, eng
+
+    out_off, _ = run(False)
+    out_on, eng = run(True)
+    assert out_off == out_on
+    assert eng.blocks.cache_evictions > 0     # the pool really did recycle
+    assert eng.copy_bytes == 0
+
+
+def test_engine_preempted_request_rehits_its_own_blocks():
+    """Recompute-after-preemption re-probes the index: the evicted request's
+    own just-cached prompt blocks are mapped back, skipping the re-prefill
+    of everything but the tail."""
+    bm = BlockManager(total_tokens=320, block_size=16, prefix_cache=True)
+    p = toks(48)
+    bm.allocate(1, 0, 49)
+    bm.commit_prefill(1, p, 48)
+    bm.free(1)                                # preemption decrefs to cache
+    assert bm.acquire_prefix(1, p) == 32      # full-hit demotion: 3 - 1
+
+
+def test_engine_vs_sim_hit_rates_agree():
+    """DESIGN §10 parity: identical token stream, wave-bursted, ample pool
+    -> engine and sim prefix hit rates are exactly equal."""
+    from repro.serving.cost_model import CostModel, PROFILES
+    from repro.serving.sim import ServingSimulator, LengthDist
+    from repro.serving.workload import feed_tokens, shared_prefix
+
+    cfg, m, params = setup_model()
+    arrivals = shared_prefix(rate=4.0, n=10, vocab_size=cfg.vocab_size,
+                             n_system_prompts=2, system_len=48,
+                             user_len=(4, 10), mean_out=6.0,
+                             p_followup=0.8, max_turns=3, turn_gap_s=100.0,
+                             seed=3)
+    waves = {}
+    for t, tk, lo in arrivals:
+        waves.setdefault(int(t // 50), []).append((t, tk, lo))
+    serve = ServeConfig(policy="static", b_max=4, max_new_tokens=6,
+                        kv_pool_tokens=4096, chunked_prefill=True,
+                        chunk_budget_tokens=24, n_prefill_lanes=2,
+                        paged_kv=True, prefix_cache=True)
+
+    eng = Engine(m, params, serve, max_context=256, buckets=(1, 2, 4),
+                 prefill_chunk=8)
+    for k in sorted(waves):
+        for _, tk, _ in waves[k]:
+            eng.submit(list(tk), max_new_tokens=6)
+        eng.run(max_steps=5000)
+
+    sim = ServingSimulator(cfg, serve, CostModel(cfg, PROFILES["a100x8"]),
+                           LengthDist(mean_in=60, mean_out=6), seed=0,
+                           prefill_chunk=8, max_context=256)
+    feed_tokens(sim, [(50.0 * (i + 1), tk, 6)
+                      for i, k in enumerate(sorted(waves))
+                      for _, tk, _ in waves[k]])
+    res = sim.run()
+    assert eng.blocks.prefix_query_tokens == sim.blocks.prefix_query_tokens
+    assert eng.blocks.prefix_hit_tokens == sim.blocks.prefix_hit_tokens
+    assert eng.summary()["prefix_hit_rate"] == res.prefix_hit_rate > 0
+
+
+def test_sim_charges_only_suffix_to_prefill_budget():
+    """A wave-2 request whose prompt is fully cached finishes its (tiny)
+    suffix prefill in far fewer fused steps than an uncached run."""
+    from repro.serving.cost_model import CostModel, PROFILES
+    from repro.serving.sim import ServingSimulator, LengthDist
+    from repro.serving.workload import feed_tokens
+
+    cfg = get_config("granite-3-8b")
+    p = toks(128, seed=5)
+
+    def run(prefix):
+        serve = ServeConfig(policy="static", b_max=2, max_new_tokens=4,
+                            kv_pool_tokens=4096, chunked_prefill=True,
+                            chunk_budget_tokens=16, paged_kv=True,
+                            prefix_cache=prefix)
+        sim = ServingSimulator(cfg, serve,
+                               CostModel(cfg, PROFILES["a100x8"]),
+                               LengthDist(mean_in=128, mean_out=4), seed=0,
+                               prefill_chunk=16)
+        feed_tokens(sim, [(0.0, p, 4), (1000.0, p, 4)])
+        res = sim.run()
+        assert res.finished == 2
+        return sim, res
+
+    sim_off, _ = run(False)
+    sim_on, _ = run(True)
+    assert sim_on.blocks.prefix_hit_tokens == 112     # 8 blocks - demoted
+    # prefill work: off prefills 2*128 tokens, on prefills 128 + 16
+    assert sim_on.tel.prefill_tokens_total \
+        < sim_off.tel.prefill_tokens_total - 64
+
+
+def test_paged_off_path_unchanged_by_prefix_flag():
+    """prefix_cache without paged_kv must be inert: byte-for-byte the
+    legacy contiguous behavior."""
+    cfg, m, params = setup_model()
+    rng = np.random.RandomState(1)
+    prompts = [list(map(int, rng.randint(0, cfg.vocab_size, size=20)))
+               for _ in range(3)]
+
+    def run(prefix):
+        serve = ServeConfig(policy="memory", b_max=2, max_new_tokens=4,
+                            kv_pool_tokens=1024, chunked_prefill=True,
+                            chunk_budget_tokens=16, paged_kv=False,
+                            prefix_cache=prefix)
+        eng = Engine(m, params, serve, max_context=64, buckets=(1, 2),
+                     prefill_chunk=8)
+        hs = [eng.submit(p, max_new_tokens=4) for p in prompts]
+        eng.run()
+        return [h.output_tokens for h in hs], eng
+
+    out_a, eng_a = run(False)
+    out_b, eng_b = run(True)
+    assert out_a == out_b
+    assert not eng_b.prefix
+    assert eng_b.blocks.prefix_hit_tokens == 0

@@ -1,0 +1,51 @@
+"""Telemetry regressions: arrival-rate span bug, cold-window sample count,
+logical-vs-physical usage passthrough (DESIGN §1, §10)."""
+from repro.core.telemetry import Telemetry
+
+
+def test_arrival_rate_single_fresh_arrival_no_spike():
+    """Pre-fix, the rate divided by `now - recent[0]`, so one arrival a
+    millisecond ago read as ~1000 req/s (and up to 1e6 at the 1e-6 clamp),
+    poisoning lambda(t). The denominator is the full horizon, clamped to
+    elapsed time."""
+    tel = Telemetry()
+    tel.on_arrival(4.999, 10)
+    rate = tel.arrival_rate(5.0, horizon=10.0)
+    assert abs(rate - 1 / 5.0) < 1e-9          # clamped to elapsed time
+    assert rate < 1.0                          # nowhere near the old spike
+
+
+def test_arrival_rate_full_horizon():
+    tel = Telemetry()
+    for t in (91.0, 95.0, 99.0):
+        tel.on_arrival(t, 10)
+    assert abs(tel.arrival_rate(100.0, horizon=10.0) - 0.3) < 1e-9
+
+
+def test_arrival_rate_empty():
+    assert Telemetry().arrival_rate(100.0) == 0.0
+
+
+def test_arrival_rate_excludes_stale():
+    tel = Telemetry()
+    tel.on_arrival(1.0, 10)
+    assert tel.arrival_rate(100.0, horizon=10.0) == 0.0
+
+
+def test_snapshot_tbt_samples_counts_window():
+    tel = Telemetry()
+    s0 = tel.snapshot(now=0.0, n_prefill=0, n_decode=0, free_tokens=0)
+    assert s0.tbt_samples == 0 and s0.tbt_ms == 0.0
+    tel.on_decode_step(12.5, 4)
+    tel.on_decode_step(7.5, 4)
+    s1 = tel.snapshot(now=1.0, n_prefill=0, n_decode=4, free_tokens=0)
+    assert s1.tbt_samples == 2
+    assert abs(s1.tbt_ms - 10.0) < 1e-9
+
+
+def test_snapshot_logical_physical_passthrough():
+    tel = Telemetry()
+    s = tel.snapshot(now=0.0, n_prefill=0, n_decode=0, free_tokens=128,
+                     logical_used_tokens=96, physical_used_tokens=64)
+    assert s.logical_used_tokens == 96
+    assert s.physical_used_tokens == 64

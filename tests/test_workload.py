@@ -5,8 +5,9 @@ from repro.config.base import ServeConfig
 from repro.config.registry import get_config
 from repro.serving.cost_model import CostModel, PROFILES
 from repro.serving.sim import LengthDist, ServingSimulator
-from repro.serving.workload import (bursty, diurnal, feed, load_trace,
-                                    poisson, save_trace)
+from repro.serving.workload import (bursty, diurnal, feed, feed_tokens,
+                                    load_trace, poisson, save_trace,
+                                    shared_prefix)
 
 L = LengthDist(mean_in=64, mean_out=64, fixed=True)
 
@@ -52,3 +53,49 @@ def test_feed_runs_simulator():
     feed(sim, bursty(2.0, 20.0, 30.0, 0.3, 150, L, seed=2))
     res = sim.run()
     assert res.finished == 150
+
+
+# ---------------------------------------------------------------------------
+# shared-prefix token workload (DESIGN §10)
+
+
+def test_shared_prefix_pool_and_turn_structure():
+    arr = shared_prefix(rate=5.0, n=200, vocab_size=500,
+                        n_system_prompts=3, system_len=32, user_len=(4, 8),
+                        p_followup=0.6, max_turns=4, seed=0)
+    assert len(arr) == 200
+    assert arr == sorted(arr, key=lambda a: a[0])
+    # every prompt opens with one of the pool's system prompts
+    openers = {tuple(toks[:32]) for _, toks, _ in arr}
+    assert len(openers) == 3
+    # multi-turn re-arrivals exist: some prompt strictly extends another
+    prompts = sorted((toks for _, toks, _ in arr), key=len)
+    extended = any(len(a) < len(b) and b[:len(a)] == a
+                   for a in prompts[:20] for b in prompts[-20:])
+    assert extended
+    # output lengths positive
+    assert all(lo >= 1 for _, _, lo in arr)
+
+
+def test_shared_prefix_deterministic():
+    kw = dict(rate=3.0, n=50, vocab_size=300, seed=7)
+    assert shared_prefix(**kw) == shared_prefix(**kw)
+    assert shared_prefix(**{**kw, "seed": 8}) != shared_prefix(**kw)
+
+
+def test_feed_tokens_runs_simulator_with_hits():
+    cfg = get_config("granite-3-8b")
+    cost = CostModel(cfg, PROFILES["a100x8"])
+    serve = ServeConfig(policy="memory", b_max=64, max_new_tokens=32,
+                        kv_pool_tokens=65536, chunked_prefill=True,
+                        paged_kv=True, prefix_cache=True)
+    sim = ServingSimulator(cfg, serve, cost, L, seed=0, prefill_chunk=64)
+    arr = shared_prefix(rate=5.0, n=120, vocab_size=cfg.vocab_size,
+                        n_system_prompts=2, system_len=64,
+                        p_followup=0.6, max_turns=4, turn_gap_s=30.0,
+                        seed=1)
+    feed_tokens(sim, arr)
+    res = sim.run()
+    assert res.finished == 120
+    assert res.prefix_hit_tokens > 0
+    assert 0.0 < res.prefix_hit_rate <= 1.0
