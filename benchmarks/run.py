@@ -10,7 +10,7 @@ def csv_out(name: str, us_per_call: float, derived: str) -> None:
 
 
 BENCHES = ("fig3", "table1", "table2", "fig4", "ablation", "burst",
-           "prefix", "roofline")
+           "prefix", "swap", "roofline")
 
 
 def main() -> None:
@@ -36,6 +36,8 @@ def main() -> None:
                 from benchmarks.burst_response import run
             elif name == "prefix":
                 from benchmarks.prefix_caching import run
+            elif name == "swap":
+                from benchmarks.kv_swap import run
             else:
                 from benchmarks.roofline import run
             run(csv_out)

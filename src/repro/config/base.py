@@ -260,7 +260,20 @@ class ServeConfig:
     prefill_pack: str = "fifo"
     max_new_tokens: int = 128
     batch_buckets: Tuple[int, ...] = ()  # () => exact batch (CPU), else bucketized
-    preempt: str = "recompute"     # TPU path: no swapping (see DESIGN §3)
+    # two-tier KV memory (DESIGN §11): a host-side swap pool of this many
+    # blocks. 0 (default) keeps today's recompute-only preemption; > 0 lets
+    # the preemption path choose per-victim between swapping the victim's
+    # blocks to host RAM (kept as a swap ledger, restored on re-admission)
+    # and recompute, using the cost-model crossover
+    # pcie_ms(blocks) < reprefill_ms(context). Requires paged_kv in the
+    # engine; attention-only families (shared gate with prefix_cache).
+    swap_space_blocks: int = 0
+    # preemption flavor when the pool would overflow: "recompute" throws
+    # the victim's KV away (vLLM recompute; the only choice when
+    # swap_space_blocks == 0), "auto" applies the DESIGN §11 cost-model
+    # crossover per victim, "swap" forces swap-out whenever it is possible
+    # at all (host space, no shared blocks — else recompute fallback)
+    preempt: str = "auto"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -108,7 +108,10 @@ class BatchingMemory(Policy):
             tel.mean_in, tel.var_in, tel.mean_out, tel.var_out)
         if tel.n_decode_running > 0 and tel.n_prefill_waiting > 0 \
                 and self.L0 is not None and mu_l > 0:
-            b_t = self.mem.b_mem_linear(self.L0, mu_l)
+            # swap pressure (DESIGN §11): the swapped-out backlog holds a
+            # claim on eta — treat its tokens as part of the safety buffer
+            # so (eta - L0 - swapped)/E[l] caps admission accordingly
+            b_t = self.mem.b_mem_linear(self.L0 + tel.swapped_tokens, mu_l)
         b_t = min(max(b_t, tel.n_decode_running), self.cfg.b_max)
         b_t = max(b_t, self.cfg.b_min)
         self.b_prev = b_t

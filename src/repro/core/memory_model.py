@@ -119,6 +119,12 @@ class MemoryModel:
         bytes, so operators see what prefix sharing actually saves."""
         return tokens * self._bpt
 
+    def blocks_to_bytes(self, n_blocks: int) -> int:
+        """KV payload bytes held by n_blocks allocator blocks — the unit
+        the swap counters charge per transferred block in BOTH engine and
+        sim, so the twins' byte telemetry stays comparable (DESIGN §11)."""
+        return n_blocks * self.block_size * self._bpt
+
     def max_requests_state_only(self) -> int:
         """SSM-style cap: requests whose state fits the budget."""
         per = self.fixed_bytes_per_request()

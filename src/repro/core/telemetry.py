@@ -32,6 +32,11 @@ class TelemetrySnapshot:
     # free, these two make the dedup visible to the controller/operator
     logical_used_tokens: int = 0
     physical_used_tokens: int = 0
+    # two-tier swap pressure (DESIGN §11): device tokens the swapped-out
+    # backlog will re-claim on swap-in. Alg 1 subtracts this from its
+    # capacity so admission cannot hand the swapped queue's headroom to
+    # new requests and starve the swap-in path.
+    swapped_tokens: int = 0
     now: float = 0.0
     # PD fusion (DESIGN §6): recent mean fraction of prefill lanes packed
     # with work, and EW-mean TTFT split into queueing vs prefill service
@@ -124,7 +129,8 @@ class Telemetry:
 
     def snapshot(self, *, now: float, n_prefill: int, n_decode: int,
                  free_tokens: int, logical_used_tokens: int = 0,
-                 physical_used_tokens: int = 0) -> TelemetrySnapshot:
+                 physical_used_tokens: int = 0,
+                 swapped_tokens: int = 0) -> TelemetrySnapshot:
         mi, vi = self.len_in.get(self.prior_mean_in, 0.0)
         mo, vo = self.len_out.get(self.prior_mean_out, 0.0)
         tbt = sum(self.tbt) / len(self.tbt) if self.tbt else 0.0
@@ -139,5 +145,6 @@ class Telemetry:
             arrival_rate=self.arrival_rate(now), free_tokens=free_tokens,
             logical_used_tokens=logical_used_tokens,
             physical_used_tokens=physical_used_tokens,
+            swapped_tokens=swapped_tokens,
             now=now, prefill_lane_occupancy=occ,
             ttft_queue_s=tq, ttft_prefill_s=tp)

@@ -15,6 +15,7 @@ import numpy as np
 from repro.config.base import ServeConfig
 from repro.config.registry import get_config, list_archs
 from repro.models.model import build_model, default_enc_len
+from repro.serving.cost_model import CostModel, PROFILES
 from repro.serving.engine import Engine
 
 
@@ -47,6 +48,21 @@ def main():
     ap.add_argument("--prefix-cache", action="store_true",
                     help="ref-counted automatic prefix sharing "
                          "(requires --paged; attention-only families)")
+    # two-tier KV memory (DESIGN §11)
+    ap.add_argument("--swap-space", type=int, default=0, metavar="BLOCKS",
+                    help="host-side swap pool size in KV blocks; 0 keeps "
+                         "recompute-only preemption (requires --paged; "
+                         "attention-only families)")
+    ap.add_argument("--preempt", default="auto",
+                    choices=["auto", "swap", "recompute"],
+                    help="preemption flavor under pool pressure: 'auto' "
+                         "applies the swap-vs-recompute cost crossover, "
+                         "'swap' forces swap whenever possible, "
+                         "'recompute' disables swapping")
+    ap.add_argument("--profile", default="a100x8",
+                    choices=sorted(PROFILES),
+                    help="hardware profile the 'auto' crossover prices "
+                         "PCIe vs re-prefill against (DESIGN §11)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, args.variant)
@@ -61,11 +77,14 @@ def main():
                         n_prefill_lanes=args.lanes,
                         prefill_pack=args.pack,
                         paged_kv=args.paged,
-                        prefix_cache=args.prefix_cache)
+                        prefix_cache=args.prefix_cache,
+                        swap_space_blocks=args.swap_space,
+                        preempt=args.preempt)
     enc_len = 16 if default_enc_len(cfg) else 0
     eng = Engine(model, params, serve, max_context=args.max_context,
                  buckets=tuple(2 ** i for i in range(0, args.b_max.bit_length())),
-                 prefill_chunk=16, enc_len=enc_len)
+                 prefill_chunk=16, enc_len=enc_len,
+                 cost=CostModel(cfg, PROFILES[args.profile]))
 
     rng = np.random.RandomState(args.seed)
     for _ in range(args.requests):

@@ -27,6 +27,9 @@ class HardwareProfile:
     hbm_per_chip: float            # bytes
     step_overhead_ms: float = 15.0  # scheduler + launch + sampling
     parallel_eff: float = 0.85     # TP scaling efficiency
+    # host<->device interconnect per chip (PCIe gen4 x16-class), the KV
+    # swap path's bandwidth (DESIGN §11)
+    pcie_bw_per_chip: float = 24e9
 
 
 PROFILES = {
@@ -83,6 +86,31 @@ class CostModel:
                 * n_tokens * ctx_len
             att = att_flops / self.total_flops
         return dense + att
+
+    # -- two-tier KV swap (DESIGN §11) ----------------------------------------
+    def swap_bytes(self, n_blocks: int, block_size: int) -> int:
+        """KV bytes held by n_blocks pool blocks (one direction's payload)."""
+        return n_blocks * block_size * self.kv_bpt
+
+    def pcie_s(self, n_blocks: int, block_size: int) -> float:
+        """One-way host<->device transfer time for n_blocks KV blocks."""
+        bw = self.hw.chips * self.hw.pcie_bw_per_chip
+        return self.swap_bytes(n_blocks, block_size) / bw
+
+    def reprefill_s(self, context_tokens: int) -> float:
+        """Time to rebuild a victim's KV from scratch: a full re-prefill of
+        its context (mean attention depth ~ context/2)."""
+        return self.prefill_tokens_s(context_tokens, context_tokens / 2.0)
+
+    def swap_beats_recompute(self, n_blocks: int, block_size: int,
+                             context_tokens: int) -> bool:
+        """The preemption crossover (DESIGN §11): swap the victim when the
+        round-trip PCIe time for its blocks undercuts re-prefilling its
+        context — trade interconnect bandwidth for re-prefill FLOPs."""
+        if self.kv_bpt == 0:
+            return False
+        return 2.0 * self.pcie_s(n_blocks, block_size) \
+            < self.reprefill_s(context_tokens)
 
     # -- the step law ---------------------------------------------------------
     def tau_step_s(self, decode_batch: int, mean_ctx: float,

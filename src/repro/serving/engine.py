@@ -30,7 +30,9 @@ from repro.core.lanes import lane_order, pack_chunks
 from repro.core.memory_model import MemoryModel
 from repro.core.telemetry import Telemetry
 from repro.models.model import Model
-from repro.serving.kv_cache import BlockManager, prefix_cache_supported
+from repro.serving.cost_model import CostModel, PROFILES
+from repro.serving.kv_cache import (BlockManager, prefix_cache_supported,
+                                    swap_supported)
 from repro.serving.request import Request, RequestState
 from repro.serving.sampling import sample
 
@@ -111,7 +113,8 @@ class Engine:
                  max_context: int = 256,
                  buckets: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64),
                  prefill_chunk: int = 32, enc_len: int = 0, seed: int = 0,
-                 temperature: float = 0.0):
+                 temperature: float = 0.0,
+                 cost: Optional[CostModel] = None):
         self.model = model
         self.cfg: ModelConfig = model.cfg
         self.serve = serve
@@ -140,8 +143,20 @@ class Engine:
         self.prefix = (serve.prefix_cache and self.paged
                        and prefix_cache_supported(self.cfg)
                        and self.mem.bytes_per_token != 0)
+        # two-tier swap space (DESIGN §11): needs the paged pool (swap moves
+        # physical blocks) and a family whose per-request state lives
+        # entirely in the K/V block pools
+        self.swap = (serve.swap_space_blocks > 0
+                     and serve.preempt != "recompute" and self.paged
+                     and swap_supported(self.cfg)
+                     and self.mem.bytes_per_token != 0)
         self.blocks = BlockManager(self.mem.eta, serve.block_size,
-                                   prefix_cache=self.prefix)
+                                   prefix_cache=self.prefix,
+                                   swap_space_blocks=serve.swap_space_blocks
+                                   if self.swap else 0)
+        # swap-vs-recompute crossover (DESIGN §11): the same CostModel the
+        # simulator twin uses; only the PCIe/prefill time laws are read
+        self.cost = cost or CostModel(self.cfg, PROFILES["a100x8"])
         self.n_slots = self.max_slots + self.n_lanes
         # per-request block-table width: enough blocks for a full context
         self.max_blocks = -(-max_context // serve.block_size)
@@ -167,13 +182,34 @@ class Engine:
         # the rest queue for a free lane.
         self.prefilling: List[Request] = []
         self.lanes: List[Optional[Request]] = [None] * self.n_lanes
+        # two-tier swap (DESIGN §11): offloaded requests awaiting swap-in;
+        # admission drains this queue before `waiting`
+        self.swapped: List[Request] = []
         self.now0 = time.perf_counter()
         self._next_rid = 0
         self.total_decoded = 0
         self.total_finished = 0
-        self.preemptions = 0
+        self.admitted_total = 0   # successful admissions from `waiting`
+        self.preemptions = 0      # evictions, recompute + swap-out alike
         self.oom_events = 0       # admission refusals at the watermark
         self.rejected = 0         # requests too large for the pool, dropped
+        self.swap_outs = 0        # victims offloaded to the host pool
+        self.swap_ins = 0         # offloaded requests restored
+        self.swap_out_bytes = 0
+        self.swap_in_bytes = 0
+        self.swap_wait_trace: List[float] = []   # per-round-trip latency (s)
+        # host-side swap storage: one numpy row set per host block, shaped
+        # like the device pools (k/v block axis 1, pos axis 0)
+        self._host_pool: Dict[str, np.ndarray] = {}
+        if self.swap:
+            nhb = serve.swap_space_blocks
+            for k in _POOL_KEYS:
+                v = self.cache.get(k)
+                if v is None:
+                    continue
+                shape = ((v.shape[0], nhb) + v.shape[2:]) if k != "pos" \
+                    else (nhb,) + v.shape[1:]
+                self._host_pool[k] = np.zeros(shape, v.dtype)
         # contiguous-layout row copies (promotion/compaction/eviction);
         # stays 0 under paged_kv — the paged layout's headline win
         self.copy_rows = 0
@@ -399,14 +435,16 @@ class Engine:
     # -- scheduling interval -------------------------------------------------------
     def step(self) -> bool:
         """One scheduling interval. Returns False when fully idle."""
-        if not self.waiting and not self.active and not self.prefilling:
+        if not self.waiting and not self.active and not self.prefilling \
+                and not self.swapped:
             return False
         tel = self.tel.snapshot(
             now=self._now(),
             n_prefill=len(self.waiting) + len(self.prefilling),
             n_decode=len(self.active), free_tokens=self.blocks.free_tokens,
             logical_used_tokens=self.blocks.logical_used_tokens,
-            physical_used_tokens=self.blocks.physical_used_tokens)
+            physical_used_tokens=self.blocks.physical_used_tokens,
+            swapped_tokens=self.blocks.swapped_tokens)
         decision = self.policy.step(tel)
         # sim-mirrored admission (DESIGN §7): bucketize the controller's cap
         # to the compiled batch buckets and apply the shared
@@ -419,8 +457,18 @@ class Engine:
             if self.serve.batch_buckets else decision.max_batch
         cap = min(cap, decision.max_batch, self.max_slots)
 
+        # swap-in drain (DESIGN §11): offloaded requests re-enter BEFORE
+        # any new admission — they resume decode without re-prefill, and
+        # while any remain, `waiting` is held back so fresh arrivals can
+        # never starve the swap-in path of pool headroom
+        while self.swapped \
+                and len(self.active) + len(self.prefilling) < cap:
+            if not self._swap_in_next():
+                self.oom_events += 1
+                break
+
         # admission
-        while self.waiting \
+        while self.waiting and not self.swapped \
                 and len(self.active) + len(self.prefilling) < cap:
             r = self.waiting[0]
             need = r.prompt_len + 1
@@ -457,6 +505,7 @@ class Engine:
                 self.blocks.note_prefix_query(r.prompt_len, cached)
             r.cached_prefix_len = cached
             self.waiting.pop(0)
+            self.admitted_total += 1
             if self.serve.chunked_prefill:
                 r.state = RequestState.PREFILLING
                 r.prefill_pos = cached
@@ -724,8 +773,98 @@ class Engine:
                        for r in self.active)
             if need <= self.blocks.free_blocks:
                 return
-            victim = self.active[-1]  # newest (vLLM recompute policy)
-            self._evict(len(self.active) - 1, victim)
+            # newest victim first in BOTH modes (vLLM preemption order);
+            # per victim, the DESIGN §11 crossover picks swap vs recompute
+            victim = self.active[-1]
+            if self._should_swap(victim):
+                self._swap_out(len(self.active) - 1, victim)
+            else:
+                self._evict(len(self.active) - 1, victim)
+
+    def _should_swap(self, r: Request) -> bool:
+        """Per-victim preemption choice (DESIGN §11): swap only when the
+        host pool can take the victim whole (shared ref>1 blocks are never
+        swapped — the recompute path decrefs them instead) and the
+        cost-model crossover says PCIe beats re-prefill. preempt="swap"
+        forces swap whenever it is possible at all."""
+        if not self.swap \
+                or not self.blocks.can_swap_out(r.rid, self.max_blocks):
+            return False
+        if self.serve.preempt == "swap":
+            return True
+        return self.cost.swap_beats_recompute(
+            len(self.blocks.tables[r.rid]), self.serve.block_size,
+            r.context_len)
+
+    def _swap_out(self, slot: int, r: Request):
+        """Offload active[slot]'s KV blocks to the host pool: an O(blocks)
+        `jax.device_get` of the victim's K/V/pos pool rows, then O(1)
+        bookkeeping — its generated tokens and TTFT stand, it re-enters
+        through the swapped queue without re-prefill (DESIGN §11)."""
+        pairs = self.blocks.swap_out(r.rid)
+        dev = jnp.asarray([d for d, _ in pairs], jnp.int32)
+        host = np.array([h for _, h in pairs], np.int32)
+        for k, hp in self._host_pool.items():
+            ax = 0 if k == "pos" else 1
+            rows = jax.device_get(jnp.take(self.cache[k], dev, axis=ax))
+            if k == "pos":
+                hp[host] = rows
+            else:
+                hp[:, host] = rows
+        # the device blocks are free now: clear their pos rows so a new
+        # tenant never sees the swapped-out tenant's stale positions
+        self._release_blocks([int(d) for d, _ in pairs])
+        # model-level KV payload bytes — the SAME accounting the sim twin
+        # and CostModel.pcie_s use, so the differential harness can assert
+        # byte parity (the physical rows moved may be wider: pos map +
+        # fp32 test pools)
+        self.swap_out_bytes += self.mem.blocks_to_bytes(len(pairs))
+        self.swap_outs += 1
+        self.preemptions += 1
+        r.state = RequestState.SWAPPED
+        r.swap_out_time = self._now()
+        if r.slot >= 0:
+            self._free_slots.append(r.slot)
+            r.slot = -1
+        self.active.pop(slot)
+        self.swapped.append(r)
+
+    def _swap_in_next(self) -> bool:
+        """Restore the oldest swapped request (FIFO) onto fresh device
+        blocks, gated by the same watermark verdict as admission. Returns
+        False when the pool cannot take it yet."""
+        r = self.swapped[0]
+        nb = len(self.blocks.swapped_tables[r.rid])
+        if self.blocks.admission_verdict(nb, self.max_blocks) != "admit":
+            return False
+        pairs = self.blocks.swap_in(r.rid)
+        # stale pos clears (cache evictions swap_in may have forced) land
+        # BEFORE the restore, so they can never wipe the restored rows
+        self._drain_released()
+        host = np.array([h for h, _ in pairs], np.int32)
+        dev = jnp.asarray([d for _, d in pairs], jnp.int32)
+        out = dict(self.cache)
+        for k, hp in self._host_pool.items():
+            if k == "pos":
+                out[k] = out[k].at[dev].set(jnp.asarray(hp[host]))
+            else:
+                out[k] = out[k].at[:, dev].set(jnp.asarray(hp[:, host]))
+        self.cache = out
+        self.swap_in_bytes += self.mem.blocks_to_bytes(len(pairs))
+        self.swap_ins += 1
+        slot = self._free_slots.pop()
+        r.slot = slot
+        self.cache = state_clear_row(self.cache, slot)
+        if r.swap_out_time >= 0:
+            wait = self._now() - r.swap_out_time
+            r.swapped_s += wait
+            r.n_swaps += 1
+            r.swap_out_time = -1.0
+            self.swap_wait_trace.append(wait)
+        r.state = RequestState.RUNNING
+        self.swapped.pop(0)
+        self.active.append(r)
+        return True
 
     def _evict(self, slot: int, r: Request):
         """Evict active[slot] for recompute. `slot` is the index in
@@ -855,9 +994,19 @@ class Engine:
             "tbt_ms_mean": (sum(self.tbt_trace) / len(self.tbt_trace))
             if self.tbt_trace else 0.0,
             "finished": self.total_finished,
+            "admitted": self.admitted_total,
             "preemptions": self.preemptions,
             "oom_events": self.oom_events,
             "rejected": self.rejected,
+            # two-tier swap (DESIGN §11)
+            "swap_outs": self.swap_outs,
+            "swap_ins": self.swap_ins,
+            "swap_out_bytes": float(self.swap_out_bytes),
+            "swap_in_bytes": float(self.swap_in_bytes),
+            "swapped_peak": float(self.blocks.swapped_peak),
+            "swap_latency_s_mean": (sum(self.swap_wait_trace)
+                                    / len(self.swap_wait_trace))
+            if self.swap_wait_trace else 0.0,
             # contiguous-layout row copies; 0 under paged_kv (DESIGN §9)
             "copy_rows": float(self.copy_rows),
             "copy_bytes": float(self.copy_bytes),

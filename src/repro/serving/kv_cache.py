@@ -15,6 +15,13 @@ becomes a decref — blocks whose refcount hits zero stay resident as an
 evictable LRU cache until the free list runs dry. Admission maps matched
 blocks into a new request's table with zero copies and prefills only the
 unmatched suffix.
+
+With `swap_space_blocks > 0` (DESIGN §11) the allocator gains a second,
+host-side block pool: preemption may `swap_out` a victim (its device table
+becomes a host-block swap ledger; the engine copies the pool rows over
+PCIe) instead of discarding its KV for recompute, and `swap_in` restores
+the ledger onto fresh device blocks when admission drains the swapped
+queue.
 """
 from __future__ import annotations
 
@@ -35,16 +42,36 @@ def prefix_cache_supported(cfg) -> bool:
             and cfg.attention == AttentionKind.FULL)
 
 
+def swap_supported(cfg) -> bool:
+    """Host-offload swapping moves paged K/V pool blocks only (DESIGN §11).
+    Families whose per-request state lives outside the block pools
+    (SSM/RG-LRU conv and recurrent state, enc-dec/VLM cross-KV) would need
+    that state saved and restored too, so swap is gated to the same
+    attention-only families as prefix sharing."""
+    return prefix_cache_supported(cfg)
+
+
 @dataclasses.dataclass
 class BlockManager:
     total_tokens: int                 # eta: pool capacity in tokens
     block_size: int = 16
     prefix_cache: bool = False        # ref-counted prefix sharing (DESIGN §10)
+    swap_space_blocks: int = 0        # host-side swap pool size (DESIGN §11)
 
     def __post_init__(self):
         self.num_blocks = self.total_tokens // self.block_size
         self._free: List[int] = list(range(self.num_blocks))
         self.tables: Dict[int, List[int]] = {}     # rid -> block ids
+        # two-tier swap space (DESIGN §11): a second, host-side block pool.
+        # A swapped-out rid's device table becomes a *swap ledger* of host
+        # block ids, restored verbatim (onto fresh device blocks) by
+        # swap_in. Host blocks are pure accounting here; the engine owns
+        # the actual host-RAM copies of the pool contents.
+        self._swap_free: List[int] = list(range(self.swap_space_blocks))
+        self.swapped_tables: Dict[int, List[int]] = {}   # rid -> host ids
+        self.swap_out_blocks = 0      # cumulative blocks copied out
+        self.swap_in_blocks = 0       # cumulative blocks copied back
+        self.swapped_peak = 0         # peak concurrently swapped requests
         # prefix-sharing state (DESIGN §10); maintained (cheaply) even with
         # prefix_cache=False so the invariants below hold unconditionally
         self.ref: Dict[int, int] = {}              # block -> refcount (>=1)
@@ -100,6 +127,23 @@ class BlockManager:
     @property
     def prefix_hit_rate(self) -> float:
         return self.prefix_hit_tokens / max(self.prefix_query_tokens, 1)
+
+    @property
+    def host_free_blocks(self) -> int:
+        """Unused blocks in the host-side swap pool (DESIGN §11)."""
+        return len(self._swap_free)
+
+    @property
+    def swapped_blocks(self) -> int:
+        """Host blocks currently holding swapped-out KV state."""
+        return sum(len(t) for t in self.swapped_tables.values())
+
+    @property
+    def swapped_tokens(self) -> int:
+        """Device tokens the swapped backlog will re-claim on swap-in —
+        the swap-pressure term Alg 1 subtracts from its capacity
+        (DESIGN §11)."""
+        return self.swapped_blocks * self.block_size
 
     def used_tokens_of(self, rid: int) -> int:
         return len(self.tables.get(rid, ())) * self.block_size
@@ -269,6 +313,70 @@ class BlockManager:
         out, self._released = self._released, []
         return out
 
+    # -- host-offload swap (DESIGN §11) ----------------------------------------
+    def can_swap_out(self, rid: int, max_blocks: int = 0) -> bool:
+        """A victim is swappable when (a) the host pool can hold its whole
+        table, (b) none of its blocks is shared — a ref > 1 block's content
+        must stay device-resident for its other owners, so shared victims
+        fall back to recompute (free() decrefs instead) — and (c) the
+        table would still be re-admittable under the §7 watermark (a
+        grown-past-capacity victim swapped out could never swap back in)."""
+        tbl = self.tables.get(rid)
+        if not tbl or len(tbl) > len(self._swap_free):
+            return False
+        if any(self.ref.get(b, 1) > 1 for b in tbl):
+            return False
+        return self.admission_verdict(len(tbl), max_blocks) != "reject"
+
+    def swap_out(self, rid: int) -> List[Tuple[int, int]]:
+        """Move `rid`'s device blocks to the host pool: the device table
+        becomes a swap ledger of host block ids, the device blocks go back
+        to the free list, and registered content is deregistered from the
+        prefix index (its device copy is gone — same as eviction-for-reuse,
+        so the index itself is otherwise untouched, DESIGN §11). Returns
+        [(device, host)] copy pairs; the caller must copy pool contents
+        (K/V *and* pos rows) to host storage BEFORE reusing the freed
+        device blocks."""
+        tbl = self.tables.pop(rid)
+        pairs: List[Tuple[int, int]] = []
+        host: List[int] = []
+        for b in tbl:
+            self.ref.pop(b, None)
+            h = self._hash_of.pop(b, None)
+            if h is not None and self._index.get(h) == b:
+                del self._index[h]
+            hb = self._swap_free.pop()
+            pairs.append((b, hb))
+            host.append(hb)
+            self._free.append(b)
+        self.swapped_tables[rid] = host
+        self._commit.pop(rid, None)
+        self.swap_out_blocks += len(host)
+        self.swapped_peak = max(self.swapped_peak, len(self.swapped_tables))
+        return pairs
+
+    def can_swap_in(self, rid: int) -> bool:
+        return len(self.swapped_tables.get(rid, ())) <= self.free_blocks
+
+    def swap_in(self, rid: int) -> List[Tuple[int, int]]:
+        """Restore a swapped-out request onto fresh device blocks (possibly
+        evicting prefix-cached blocks, exactly like allocate). Returns
+        [(host, device)] copy pairs; the caller copies the host contents
+        back into the pool (after draining `take_released`, so a stale pos
+        clear can never land on top of the restored rows) and returns the
+        host blocks' contents to the swap pool."""
+        host = self.swapped_tables.pop(rid)
+        tbl = self.tables.setdefault(rid, [])
+        pairs: List[Tuple[int, int]] = []
+        for hb in host:
+            b = self._pop_block()
+            self.ref[b] = 1
+            tbl.append(b)
+            pairs.append((hb, b))
+            self._swap_free.append(hb)
+        self.swap_in_blocks += len(host)
+        return pairs
+
     # -- mutations ------------------------------------------------------------
     def allocate(self, rid: int, cur_tokens: int, new_tokens: int) -> bool:
         n = self.blocks_needed(cur_tokens, new_tokens, rid)
@@ -300,6 +408,9 @@ class BlockManager:
             else:
                 self._free.append(b)
                 freed.append(b)
+        # a finished/cancelled request may still hold a swap ledger
+        # (DESIGN §11): its host blocks return to the swap pool
+        self._swap_free.extend(self.swapped_tables.pop(rid, ()))
         self._commit.pop(rid, None)
         return freed
 
@@ -312,3 +423,5 @@ class BlockManager:
         self._cached.clear()
         self._commit.clear()
         self._released.clear()
+        self._swap_free = list(range(self.swap_space_blocks))
+        self.swapped_tables.clear()

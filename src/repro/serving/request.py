@@ -11,6 +11,7 @@ class RequestState(enum.Enum):
     PREFILLING = "prefilling"  # chunked prefill in progress
     RUNNING = "running"        # decoding
     PREEMPTED = "preempted"    # evicted; will re-prefill (recompute policy)
+    SWAPPED = "swapped"        # KV offloaded to the host pool (DESIGN §11)
     FINISHED = "finished"
 
 
@@ -40,6 +41,10 @@ class Request:
     first_token_time: float = -1.0
     finish_time: float = -1.0
     tbt_samples: List[float] = dataclasses.field(default_factory=list)
+    # two-tier swap (DESIGN §11): per-request swap latency accounting
+    swap_out_time: float = -1.0                  # pending swap-out timestamp
+    swapped_s: float = 0.0                       # total time spent offloaded
+    n_swaps: int = 0                             # completed swap round trips
 
     def __post_init__(self):
         if self.prompt_tokens is not None and self.prompt_len == 0:
@@ -57,6 +62,12 @@ class Request:
 
     def sim_emit_token(self):
         self._sim_outlen += 1
+
+    def sim_reset_output(self):
+        """Recompute preemption (simulator): the engine regenerates the
+        victim's output from scratch on re-admission, so the sim twin
+        drops the emitted count to mirror it step-for-step (DESIGN §11)."""
+        self._sim_outlen = 0
 
     @property
     def done(self) -> bool:

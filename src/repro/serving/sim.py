@@ -7,13 +7,21 @@ how the paper's GPU-scale tables (LLaMA-65B/70B, PanGu-7/38/135B) are
 reproduced on CPU; the scheduling code under test is identical, byte for
 byte.
 
-Step semantics mirror vLLM 0.x (the paper's substrate):
-  * non-fused mode: a step is EITHER a prefill batch (when the policy admits
-    waiting requests and prefill work exists) OR one decode iteration.
+Step semantics mirror the engine exactly, interval for interval (the
+differential harness in `tests/test_differential.py` pins the parity):
+  * non-fused mode: admission prefills each admitted request immediately
+    (its first token comes from the prefill's final logits), then one
+    decode iteration over the running batch.
   * PD-fusion mode (chunked prefill, DESIGN §6): each step packs
     `chunk_budget` prefill tokens across up to `n_prefill_lanes` concurrent
     prefills (the engine's lane semantics: sticky lanes, fifo/srf packer,
-    optional per-lane chunk cap) alongside all running decodes.
+    optional per-lane chunk cap); finished lanes promote BEFORE the decode
+    batch forms, so a promoted request decodes in its promotion interval.
+  * preemption (DESIGN §11): newest victim first; per victim the cost-model
+    crossover picks host-offload swap (blocks to the swap ledger, restored
+    by the swapped-queue drain ahead of admission) vs recompute (KV
+    discarded; the emitted count resets because the engine regenerates the
+    victim's output from scratch).
 """
 from __future__ import annotations
 
@@ -28,7 +36,8 @@ from repro.core.lanes import lane_order, pack_chunks
 from repro.core.memory_model import MemoryModel
 from repro.core.telemetry import Telemetry
 from repro.serving.cost_model import CostModel
-from repro.serving.kv_cache import BlockManager, prefix_cache_supported
+from repro.serving.kv_cache import (BlockManager, prefix_cache_supported,
+                                    swap_supported)
 from repro.serving.request import Request, RequestState
 
 
@@ -63,9 +72,17 @@ class SimResult:
     total_tokens: int = 0
     duration_s: float = 0.0
     finished: int = 0
-    preemptions: int = 0
+    admitted: int = 0               # successful admissions from `waiting`
+    preemptions: int = 0            # evictions, recompute + swap-out alike
     oom_events: int = 0
     rejected: int = 0               # requests too large for the pool, dropped
+    # two-tier swap (DESIGN §11)
+    swap_outs: int = 0
+    swap_ins: int = 0
+    swap_out_bytes: int = 0
+    swap_in_bytes: int = 0
+    swapped_peak: int = 0           # peak concurrently offloaded requests
+    swap_latency_s_mean: float = 0.0
     tbt_ms_mean: float = 0.0
     tbt_ms_p95: float = 0.0
     # prefix sharing (DESIGN §10): admission-time shared-prefix telemetry
@@ -109,6 +126,7 @@ class ServingSimulator:
         # engine-mirrored per-request block-table width (DESIGN §9): with a
         # max_context the sim rejects prompts wider than the table exactly
         # like the engine; 0 = unbounded (the sim has no physical table)
+        self.max_context = max_context
         self.max_blocks = -(-max_context // serve.block_size) \
             if max_context else 0
         self.n_lanes = max(1, serve.n_prefill_lanes)
@@ -128,8 +146,17 @@ class ServingSimulator:
         # token content (feed_tokens / shared-prefix workloads) to match
         self.prefix = (serve.prefix_cache and prefix_cache_supported(cfg)
                        and self.mem.bytes_per_token != 0)
+        # two-tier swap (DESIGN §11): the engine's exact gate — the engine
+        # needs the paged pool to move physical blocks, so the sim honors
+        # paged_kv too to keep the twins' behavior identical
+        self.swap = (serve.swap_space_blocks > 0
+                     and serve.preempt != "recompute" and serve.paged_kv
+                     and swap_supported(cfg)
+                     and self.mem.bytes_per_token != 0)
         self.blocks = BlockManager(eta, serve.block_size,
-                                   prefix_cache=self.prefix)
+                                   prefix_cache=self.prefix,
+                                   swap_space_blocks=serve.swap_space_blocks
+                                   if self.swap else 0)
         self.tel = Telemetry(prior_mean_in=lengths.mean_in,
                              prior_mean_out=lengths.mean_out)
         self.policy = policy or make_policy(serve, self.mem)
@@ -139,10 +166,14 @@ class ServingSimulator:
         # fused-mode prefill backlog (admitted, chunk-prefilling; engine's
         # `prefilling` list)
         self.pending_prefill: List[Request] = []
+        # offloaded requests awaiting swap-in (DESIGN §11); admission
+        # drains this queue before `waiting`, exactly like the engine
+        self.swapped: List[Request] = []
         self._all: List[Request] = []
         self.now = 0.0
         self.res = SimResult()
         self._tbts: List[float] = []
+        self._swap_waits: List[float] = []
         self._sla_ok = 0
         self._sla_steps = 0
 
@@ -171,7 +202,8 @@ class ServingSimulator:
             n_decode=len(self.running),
             free_tokens=self.blocks.free_tokens,
             logical_used_tokens=self.blocks.logical_used_tokens,
-            physical_used_tokens=self.blocks.physical_used_tokens)
+            physical_used_tokens=self.blocks.physical_used_tokens,
+            swapped_tokens=self.blocks.swapped_tokens)
 
     def _admit(self, decision: BatchDecision):
         """Admission control: fill up to max_batch respecting the block pool."""
@@ -180,7 +212,17 @@ class ServingSimulator:
         cap = bucketize(decision.max_batch, self.serve.batch_buckets) \
             if self.serve.batch_buckets else decision.max_batch
         cap = min(cap, decision.max_batch)
+        # swap-in drain (DESIGN §11, engine-mirrored): offloaded requests
+        # re-enter before any new admission, and while any remain the
+        # waiting queue is held back
+        while self.swapped \
+                and len(self.running) + len(self.pending_prefill) < cap:
+            if not self._swap_in_next():
+                self.res.oom_events += 1
+                break
         admitted = []
+        if self.swapped:
+            return admitted
         for r in list(self.waiting):
             # engine-mirrored cap: running + prefill backlog + this batch
             if len(self.running) + len(self.pending_prefill) \
@@ -219,6 +261,7 @@ class ServingSimulator:
             if self.prefix:
                 self.blocks.note_prefix_query(r.prompt_len, cached)
             r.cached_prefix_len = cached
+            self.res.admitted += 1
             admitted.append(r)
         for r in admitted:
             self.waiting.remove(r)
@@ -227,30 +270,86 @@ class ServingSimulator:
         return admitted
 
     def _preempt_if_needed(self):
-        """On pool exhaustion mid-decode, evict newest requests (recompute)."""
+        """On pool exhaustion mid-decode, evict newest requests; per victim
+        the DESIGN §11 crossover picks host-offload swap vs recompute."""
         if self.mem.bytes_per_token == 0:
             return  # constant per-request state: decode never grows it
         while self.running:
-            grow = [r for r in self.running
-                    if self.blocks.blocks_needed(r.context_len, 1, r.rid) > 0]
             need = sum(self.blocks.blocks_needed(r.context_len, 1, r.rid)
-                       for r in grow)
+                       for r in self.running)
             if need <= self.blocks.free_blocks:
                 return
-            victim = self.running.pop()  # newest (vLLM recompute policy)
-            self.blocks.free(victim.rid)
-            victim.state = RequestState.WAITING
-            victim.prefill_pos = 0
-            # recompute re-probes the prefix index at re-admission (§10)
-            victim.cached_prefix_len = 0
-            # engine-mirrored: re-attribute TTFT on the recompute pass
-            victim.prefill_start_time = -1.0
-            # vLLM recompute: generated tokens are REPLAYED as prefill (they
-            # are kept, not regenerated) — context_len stays, only the KV is
-            # rebuilt. The re-prefill cost lands in _prefill_step via
-            # context_len.
-            self.waiting.insert(0, victim)
-            self.res.preemptions += 1
+            victim = self.running[-1]  # newest first in BOTH modes (vLLM)
+            if self._should_swap(victim):
+                self._swap_out(victim)
+            else:
+                self._recompute_evict(victim)
+
+    def _recompute_evict(self, victim: Request):
+        """Recompute preemption: discard the victim's KV; it re-prefills
+        its prompt from scratch and regenerates its output (the engine
+        clears `output_tokens`; greedy decoding makes the regenerated
+        tokens identical)."""
+        self.running.remove(victim)
+        self.blocks.free(victim.rid)
+        victim.state = RequestState.WAITING
+        victim.prefill_pos = 0
+        # recompute re-probes the prefix index at re-admission (§10)
+        victim.cached_prefix_len = 0
+        # engine-mirrored: re-attribute TTFT on the recompute pass
+        victim.prefill_start_time = -1.0
+        victim.sim_reset_output()
+        self.waiting.insert(0, victim)
+        self.res.preemptions += 1
+
+    def _should_swap(self, r: Request) -> bool:
+        """Engine-mirrored per-victim choice (DESIGN §11): host space +
+        no shared blocks + re-admittable, then the cost-model crossover
+        (preempt="swap" forces swap whenever possible)."""
+        if not self.swap \
+                or not self.blocks.can_swap_out(r.rid, self.max_blocks):
+            return False
+        if self.serve.preempt == "swap":
+            return True
+        return self.cost.swap_beats_recompute(
+            len(self.blocks.tables[r.rid]), self.serve.block_size,
+            r.context_len)
+
+    def _swap_out(self, r: Request):
+        """Offload the victim to the host pool: the PCIe transfer time
+        lands on the sim clock, the blocks move to the swap ledger."""
+        nb = len(self.blocks.tables[r.rid])
+        self.blocks.swap_out(r.rid)
+        self.now += self.cost.pcie_s(nb, self.serve.block_size)
+        self.res.swap_outs += 1
+        self.res.preemptions += 1
+        self.res.swap_out_bytes += self.mem.blocks_to_bytes(nb)
+        r.state = RequestState.SWAPPED
+        r.swap_out_time = self.now
+        self.running.remove(r)
+        self.swapped.append(r)
+
+    def _swap_in_next(self) -> bool:
+        """Restore the oldest swapped request (FIFO), gated by the same
+        watermark verdict as admission; False when the pool can't take it."""
+        r = self.swapped[0]
+        nb = len(self.blocks.swapped_tables[r.rid])
+        if self.blocks.admission_verdict(nb, self.max_blocks) != "admit":
+            return False
+        self.blocks.swap_in(r.rid)
+        self.now += self.cost.pcie_s(nb, self.serve.block_size)
+        self.res.swap_ins += 1
+        self.res.swap_in_bytes += self.mem.blocks_to_bytes(nb)
+        if r.swap_out_time >= 0:
+            wait = self.now - r.swap_out_time
+            r.swapped_s += wait
+            r.n_swaps += 1
+            r.swap_out_time = -1.0
+            self._swap_waits.append(wait)
+        r.state = RequestState.RUNNING
+        self.swapped.pop(0)
+        self.running.append(r)
+        return True
 
     # -- steps -------------------------------------------------------------------
     def _prefill_step(self, reqs: List[Request]):
@@ -273,6 +372,9 @@ class ServingSimulator:
                                            r.prompt_len)
             self.tel.on_first_token(r.prefill_start_time - r.arrival_time,
                                     self.now - r.prefill_start_time)
+            # the engine samples the first output token from the prefill's
+            # final logits — mirror the emission so step counts line up
+            r.sim_emit_token()
             self.running.append(r)
 
     # -- PD-fusion lane packer (shared with the engine, DESIGN §6) -------------
@@ -291,18 +393,12 @@ class ServingSimulator:
             self.lanes[j] = r
 
     def _decode_step(self, fused_prefill: List[Request], chunk_budget: int):
-        b = len(self.running)
-        mean_ctx = sum(r.context_len for r in self.running) / max(b, 1)
-        # grow KV by one token per running request. State-only families
-        # (bytes_per_token == 0) hold constant per-request state — growing
-        # them would drain free_tokens linearly (phantom usage, spurious
-        # preemptions). A failed grow is an OOM event, not silent drift.
-        if self.mem.bytes_per_token != 0:
-            for r in self.running:
-                if not self.blocks.allocate(r.rid, r.context_len, 1):
-                    self.res.oom_events += 1
         pf_tokens = 0
-        if fused_prefill:
+        promoted: List[Request] = []
+        # zero budget skips lane filling too (the engine's _advance_prefill
+        # returns before assigning lanes) so lane assignment order cannot
+        # drift between the twins across zero-budget intervals
+        if fused_prefill and chunk_budget > 0:
             self._fill_lanes(fused_prefill)
             plan = pack_chunks(self.serve.prefill_pack, self.lanes,
                                chunk_budget, self.prefill_chunk)
@@ -318,10 +414,34 @@ class ServingSimulator:
             pf_tokens = sum(lane_tokens.values())
             if lane_tokens:
                 self.tel.on_prefill_interval(lane_tokens, self.n_lanes)
+            # finished lanes promote BEFORE the decode batch forms
+            # (lane-index order: deterministic, matches the engine) — a
+            # promoted request decodes in its promotion interval
+            for j in range(self.n_lanes):
+                r = self.lanes[j]
+                if r is None or r.prefill_pos < r.prompt_len:
+                    continue
+                self.lanes[j] = None
+                r.lane = -1
+                r.state = RequestState.RUNNING
+                promoted.append(r)
+                self.running.append(r)
+                fused_prefill.remove(r)
+        b = len(self.running)
+        mean_ctx = sum(r.context_len for r in self.running) / max(b, 1)
         dt = self.cost.tau_step_s(b, mean_ctx, prefill_tokens=pf_tokens,
                                   prefill_ctx=mean_ctx)
         self.now += dt
         tbt_ms = dt * 1e3
+        # a promoted request's first token comes from the final prefill
+        # chunk's logits (the engine appends it at promotion), then it
+        # joins the decode emission below — two tokens in the promotion
+        # interval, exactly like the engine
+        for r in promoted:
+            r.first_token_time = self.now
+            self.tel.on_first_token(r.prefill_start_time - r.arrival_time,
+                                    self.now - r.prefill_start_time)
+            r.sim_emit_token()
         if b:
             self.tel.on_decode_step(tbt_ms, b)
             self._tbts.append(tbt_ms)
@@ -329,31 +449,35 @@ class ServingSimulator:
             if self.serve.d_sla_ms <= 0 or tbt_ms <= self.serve.d_sla_ms \
                     + self.serve.eps_d_ms:
                 self._sla_ok += 1
-        # finished lanes promote to running (lane-index order: deterministic,
-        # matches the engine)
-        for j in range(self.n_lanes):
-            r = self.lanes[j]
-            if r is None or r.prefill_pos < r.prompt_len:
-                continue
-            self.lanes[j] = None
-            r.lane = -1
-            r.state = RequestState.RUNNING
-            r.first_token_time = self.now
-            self.tel.on_first_token(r.prefill_start_time - r.arrival_time,
-                                    self.now - r.prefill_start_time)
-            self.running.append(r)
-            fused_prefill.remove(r)
-        # token emission + completion
+        # token emission + growth + completion, engine-mirrored: grow the
+        # KV for the NEXT step's write, emit, finish-check; finished
+        # requests free in reverse order; failed grows preempt (recompute)
+        # after finish processing instead of silently drifting. State-only
+        # families (bytes_per_token == 0) hold constant per-request state —
+        # growing them would drain free_tokens linearly (phantom usage).
         self.res.total_tokens += b
-        for r in list(self.running):
+        finished: List[Request] = []
+        grow_failed: List[Request] = []
+        for r in self.running:
+            grew = True
+            if self.mem.bytes_per_token != 0:
+                grew = self.blocks.allocate(r.rid, r.context_len, 1)
             r.sim_emit_token()
-            if r.done:
-                r.state = RequestState.FINISHED
-                r.finish_time = self.now
-                self.tel.on_completion(r.output_len)
-                self.blocks.free(r.rid)
-                self.running.remove(r)
-                self.res.finished += 1
+            if r.done or (self.max_context
+                          and r.context_len >= self.max_context - 1):
+                finished.append(r)
+            elif not grew:
+                grow_failed.append(r)
+        for r in reversed(finished):
+            r.state = RequestState.FINISHED
+            r.finish_time = self.now
+            self.tel.on_completion(r.output_len)
+            self.blocks.free(r.rid)
+            self.running.remove(r)
+            self.res.finished += 1
+        for r in grow_failed:
+            if r in self.running:
+                self._recompute_evict(r)
         self.res.batch_trace.append(b)
 
     # -- main loop -----------------------------------------------------------------
@@ -362,20 +486,21 @@ class ServingSimulator:
             self.tel.on_arrival(r.arrival_time, r.prompt_len)
         pending_prefill = self.pending_prefill
         steps = 0
-        while (self.waiting or self.running or pending_prefill) \
-                and steps < max_steps:
+        while (self.waiting or self.running or pending_prefill
+               or self.swapped) and steps < max_steps:
             steps += 1
             # idle-advance to next arrival if nothing to do
-            if not self.running and not pending_prefill and self.waiting \
+            if not self.running and not pending_prefill \
+                    and not self.swapped and self.waiting \
                     and self.waiting[0].arrival_time > self.now:
                 self.now = self.waiting[0].arrival_time
             tel = self._snapshot()
             decision = self.policy.step(tel)
             self.res.decisions.append(decision)
             admitted = self._admit(decision)
-            self._preempt_if_needed()
             if self.serve.chunked_prefill:
                 pending_prefill.extend(admitted)
+                self._preempt_if_needed()
                 budget = decision.chunk_budget \
                     or self.serve.chunk_budget_tokens
                 if budget <= 0 and pending_prefill and not self.running:
@@ -385,8 +510,13 @@ class ServingSimulator:
                         or pending_prefill[0].prompt_len
                 self._decode_step(pending_prefill, budget)
             else:
+                # engine order: admitted requests prefill immediately
+                # (inside the engine's admission loop), THEN the pool
+                # pressure check runs — just-prefilled requests are
+                # preemption candidates like any other
                 if admitted:
                     self._prefill_step(admitted)
+                self._preempt_if_needed()
                 if self.running:
                     self._decode_step([], 0)
             # no physical pos rows to clear in the sim — drain the
@@ -422,4 +552,8 @@ class ServingSimulator:
         self.res.prefix_query_tokens = self.blocks.prefix_query_tokens
         self.res.prefix_hit_rate = self.blocks.prefix_hit_rate
         self.res.cache_evictions = self.blocks.cache_evictions
+        self.res.swapped_peak = self.blocks.swapped_peak
+        if self._swap_waits:
+            self.res.swap_latency_s_mean = \
+                sum(self._swap_waits) / len(self._swap_waits)
         return self.res

@@ -305,3 +305,23 @@ def test_chunked_prefill_budget():
     pol = BatchingMemory(cfg, m)
     d = pol.step(snap(n_decode_running=30))
     assert d.chunk_budget == max(d.max_batch - 30, 0)
+
+
+def test_alg1_swap_pressure_shrinks_batch():
+    """DESIGN §11: the swapped-out backlog holds a claim on eta — Alg 1
+    must cap admission lower while it waits to swap back in, and recover
+    once the backlog drains."""
+    m = mem()
+    cfg = ServeConfig(policy="memory", b_max=4096)
+
+    def b_at(swapped_tokens):
+        pol = BatchingMemory(cfg, m)
+        return pol.step(snap(n_decode_running=1,
+                             swapped_tokens=swapped_tokens)).max_batch
+
+    b0 = b_at(0)
+    b_light = b_at(50_000)
+    b_heavy = b_at(500_000)
+    assert b0 >= b_light >= b_heavy
+    assert b0 > b_heavy                # pressure genuinely bites
+    assert b_heavy >= cfg.b_min

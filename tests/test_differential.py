@@ -1,0 +1,171 @@
+"""Differential engine-vs-sim harness (DESIGN §7/§11).
+
+The simulator is the engine's discrete-event twin: the same controller
+stack, interval for interval. This harness drives randomized workloads
+through BOTH under the same config and asserts exact parity on the
+controller-visible counters — admitted / preemptions / oom_events /
+rejected / swap_outs / swap_ins — and on the completion and rejection
+sets. The two-tier swap policy (DESIGN §11) must land green under it with
+swap enabled and disabled.
+
+Example counts are bounded (the engine runs real jit-compiled steps) so
+the harness fits the tier-1 CI budget.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.config.base import ServeConfig
+from repro.config.registry import get_config
+from repro.core.telemetry import Telemetry
+from repro.models.model import build_model
+from repro.serving.cost_model import CostModel, PROFILES
+from repro.serving.engine import Engine
+from repro.serving.request import Request
+from repro.serving.sim import LengthDist, ServingSimulator
+
+MAX_CONTEXT = 96
+_MODEL = {}
+
+
+def setup_model():
+    if not _MODEL:
+        cfg = get_config("granite-3-8b", "reduced")
+        m = build_model(cfg, dtype=jnp.float32)
+        _MODEL["cfg"] = cfg
+        _MODEL["m"] = m
+        _MODEL["params"] = m.init(jax.random.PRNGKey(0))
+    return _MODEL["cfg"], _MODEL["m"], _MODEL["params"]
+
+
+def run_pair(prompt_lens, max_new, serve, seed=0):
+    """Run the identical workload (all arrivals at t=0) through the real
+    engine and the simulator twin; return both."""
+    cfg, m, params = setup_model()
+    cost = CostModel(cfg, PROFILES["a100x8"])
+    eng = Engine(m, params, serve, max_context=MAX_CONTEXT,
+                 buckets=(1, 2, 4, 8), prefill_chunk=8, cost=cost)
+    rng = np.random.RandomState(seed)
+    hs = []
+    for pl in prompt_lens:
+        toks = list(map(int, rng.randint(0, cfg.vocab_size, size=pl)))
+        hs.append(eng.submit(toks, max_new_tokens=max_new, arrival_time=0.0))
+    eng.run(max_steps=20_000)
+
+    sim = ServingSimulator(cfg, serve, cost,
+                           LengthDist(mean_in=float(np.mean(prompt_lens)),
+                                      mean_out=float(max_new)),
+                           seed=0, prefill_chunk=8, max_context=MAX_CONTEXT)
+    # the engine's telemetry starts prior-free — match it exactly
+    sim.tel = Telemetry()
+    for i, pl in enumerate(prompt_lens):
+        # engine.submit caps max_new at the context budget; mirror it
+        mx = min(max_new, MAX_CONTEXT - pl - 1)
+        sim.waiting.append(Request(rid=i, arrival_time=0.0, prompt_len=pl,
+                                   max_new_tokens=mx))
+    sim._all.extend(sim.waiting)
+    res = sim.run(max_steps=20_000)
+    return eng, hs, sim, res
+
+
+def assert_parity(eng, hs, sim, res, ctx=""):
+    assert eng.admitted_total == res.admitted, ctx
+    assert eng.preemptions == res.preemptions, ctx
+    assert eng.oom_events == res.oom_events, ctx
+    assert eng.rejected == res.rejected, ctx
+    assert eng.swap_outs == res.swap_outs, ctx
+    assert eng.swap_ins == res.swap_ins, ctx
+    # both twins charge model-level KV payload bytes per swapped block
+    assert eng.swap_out_bytes == res.swap_out_bytes, ctx
+    assert eng.swap_in_bytes == res.swap_in_bytes, ctx
+    eng_done = {h.rid for h in hs
+                if h.state.value == "finished" and not h.rejected}
+    sim_done = {r.rid for r in sim._all
+                if r.state.value == "finished" and not r.rejected}
+    assert eng_done == sim_done, ctx
+    eng_rej = {h.rid for h in hs if h.rejected}
+    sim_rej = {r.rid for r in sim._all if r.rejected}
+    assert eng_rej == sim_rej, ctx
+    # both drained completely
+    assert not eng.waiting and not eng.active and not eng.prefilling \
+        and not eng.swapped, ctx
+    assert not sim.waiting and not sim.running and not sim.pending_prefill \
+        and not sim.swapped, ctx
+
+
+def serve_cfg(*, policy="static", b_max=4, pool_tokens=256, swap_blocks=0,
+              chunked=True, lanes=2, budget=24, preempt="auto"):
+    return ServeConfig(policy=policy, b_max=b_max, max_new_tokens=6,
+                       kv_pool_tokens=pool_tokens, block_size=16,
+                       chunked_prefill=chunked, chunk_budget_tokens=budget,
+                       n_prefill_lanes=lanes, paged_kv=True,
+                       swap_space_blocks=swap_blocks, preempt=preempt)
+
+
+# ---------------------------------------------------------------------------
+# fixed scenarios: the regimes the randomized sweep must also cover
+
+
+@pytest.mark.parametrize("swap_blocks,preempt", [(0, "auto"), (16, "swap")])
+@pytest.mark.parametrize("chunked", [False, True])
+def test_differential_tight_pool_preemption(chunked, swap_blocks, preempt):
+    """A pool too small for the batch forces preemptions; engine and sim
+    must agree on every counter with swapping off AND forced on."""
+    serve = serve_cfg(pool_tokens=160, swap_blocks=swap_blocks,
+                      chunked=chunked, preempt=preempt, b_max=4)
+    eng, hs, sim, res = run_pair([40, 44, 38, 46], max_new=12, serve=serve,
+                                 seed=1)
+    assert eng.preemptions > 0          # the regime actually triggered
+    if swap_blocks:
+        assert eng.swap_outs > 0 and eng.swap_ins > 0
+    assert_parity(eng, hs, sim, res)
+
+
+def test_differential_rejection_and_watermark():
+    """Unservable prompts are rejected (not wedged) identically, and
+    watermark deferrals count identically."""
+    serve = serve_cfg(pool_tokens=128, b_max=4, chunked=True)
+    # 90-token prompt: 6 blocks vs a 8-block pool with 1-block watermark
+    eng, hs, sim, res = run_pair([90, 20, 88, 24], max_new=4, serve=serve,
+                                 seed=2)
+    assert_parity(eng, hs, sim, res)
+
+
+def test_differential_memory_policy():
+    """Alg-1 (memory policy) decisions feed back on telemetry that both
+    twins must produce identically."""
+    serve = serve_cfg(policy="memory", pool_tokens=256, b_max=8,
+                      swap_blocks=12, preempt="swap")
+    eng, hs, sim, res = run_pair([24, 18, 30, 12, 26, 20], max_new=5,
+                                 serve=serve, seed=3)
+    assert_parity(eng, hs, sim, res)
+
+
+# ---------------------------------------------------------------------------
+# randomized sweep (bounded example count: each example runs the real
+# engine — keep tier-1 wall-time in budget)
+
+
+@given(st.integers(0, 10_000),
+       st.integers(2, 5),
+       st.sampled_from([10, 12, 16]),          # pool blocks
+       st.sampled_from([0, 8, 24]),            # swap space blocks
+       st.booleans(),                          # chunked prefill
+       st.sampled_from(["static", "memory"]),
+       st.sampled_from(["auto", "swap"]))
+@settings(max_examples=8, deadline=None)
+def test_differential_randomized(seed, n_req, pool_blocks, swap_blocks,
+                                 chunked, policy, preempt):
+    rng = np.random.RandomState(seed)
+    prompt_lens = [int(rng.randint(6, 44)) for _ in range(n_req)]
+    serve = serve_cfg(policy=policy, b_max=4,
+                      pool_tokens=pool_blocks * 16,
+                      swap_blocks=swap_blocks, chunked=chunked,
+                      lanes=int(rng.randint(1, 3)), preempt=preempt)
+    eng, hs, sim, res = run_pair(prompt_lens, max_new=int(rng.randint(2, 7)),
+                                 serve=serve, seed=seed)
+    assert_parity(eng, hs, sim, res,
+                  ctx=f"seed={seed} pool={pool_blocks} swap={swap_blocks} "
+                      f"chunked={chunked} policy={policy} preempt={preempt}")

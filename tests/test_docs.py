@@ -20,9 +20,10 @@ def design_sections():
 
 def test_design_exists_with_numbered_sections():
     secs = design_sections()
-    # the sections the issue demands: controller stack, memory model
-    # (eq. 12/14), bucketized static shapes, PD fusion
-    assert {"1", "2", "3", "6"} <= secs, secs
+    # the sections the issues demand: controller stack, memory model
+    # (eq. 12/14), bucketized static shapes, PD fusion, paged KV, prefix
+    # sharing, and the two-tier swap space
+    assert {"1", "2", "3", "6", "9", "10", "11"} <= secs, secs
 
 
 def test_source_design_references_resolve():

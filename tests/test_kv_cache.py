@@ -128,3 +128,136 @@ def toks(n, seed=0):
     import random
     rng = random.Random(seed)
     return [rng.randrange(997) for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# two-tier swap-ledger invariants (DESIGN §11)
+
+
+def _check_two_tier_invariants(bm: BlockManager):
+    """Device pool: free + evictable + referenced == num_blocks (the §10
+    invariant, undisturbed by swapping). Host pool: swap-free + ledgered
+    == swap_space_blocks, with no block in both states and no rid both
+    device-resident and swapped."""
+    _check_refcount_invariants(bm)
+    host_free = set(bm._swap_free)
+    ledgered = [b for t in bm.swapped_tables.values() for b in t]
+    assert len(bm._swap_free) == len(host_free)    # no host double-free
+    assert len(ledgered) == len(set(ledgered))     # no host double-own
+    assert not (host_free & set(ledgered))
+    assert len(host_free) + len(ledgered) == bm.swap_space_blocks
+    assert not (set(bm.tables) & set(bm.swapped_tables))
+    assert bm.swapped_blocks == len(ledgered)
+
+
+@given(st.lists(st.tuples(st.integers(0, 4), st.integers(0, 5),
+                          st.integers(1, 40)), max_size=70))
+@settings(max_examples=120, deadline=None)
+def test_swap_ledger_invariants(ops):
+    """Random interleavings of admit/commit/grow/free/swap-out/swap-in —
+    with the prefix cache live underneath — can never break either pool's
+    conservation, and a swapped rid's ledger survives arbitrary device
+    churn until its own swap-in."""
+    bm = BlockManager(total_tokens=320, block_size=16, prefix_cache=True,
+                      swap_space_blocks=12)
+    prompts = {}
+    for rid, op, n in ops:
+        if op == 0:          # admit
+            if rid in bm.tables or rid in bm.swapped_tables:
+                continue
+            p = toks(16 + n, seed=n % 7)
+            cached = bm.acquire_prefix(rid, p)
+            if bm.allocate(rid, cached, len(p) + 1 - cached):
+                prompts[rid] = p
+            else:
+                bm.free(rid)
+                prompts.pop(rid, None)
+        elif op == 1:        # prefill progress
+            if rid in prompts and rid in bm.tables:
+                bm.commit_prefill(rid, prompts[rid],
+                                  min(n, len(prompts[rid])))
+        elif op == 2:        # decode grow
+            if rid in bm.tables:
+                bm.allocate(rid, len(bm.tables[rid]) * 16, 1)
+        elif op == 3:        # finish / recompute-evict
+            bm.free(rid)
+            prompts.pop(rid, None)
+        elif op == 4:        # swap-out (the engine checks can_swap_out)
+            if rid in bm.tables and bm.can_swap_out(rid):
+                pairs = bm.swap_out(rid)
+                assert bm.swapped_tables[rid] == [h for _, h in pairs]
+        else:                # swap-in
+            if rid in bm.swapped_tables and bm.can_swap_in(rid):
+                nb = len(bm.swapped_tables[rid])
+                pairs = bm.swap_in(rid)
+                assert len(pairs) == len(bm.tables[rid]) == nb
+        _check_two_tier_invariants(bm)
+    for rid in list(bm.tables) + list(bm.swapped_tables):
+        bm.free(rid)
+    _check_two_tier_invariants(bm)
+    assert bm.free_blocks == bm.num_blocks
+    assert bm.host_free_blocks == bm.swap_space_blocks
+
+
+@given(st.lists(st.tuples(st.integers(0, 4), st.integers(0, 3),
+                          st.integers(1, 24)), max_size=60))
+@settings(max_examples=100, deadline=None)
+def test_swap_roundtrip_restores_pool_contents(ops):
+    """Byte-identity at the allocator contract level: emulate the pool as
+    one payload per block, apply exactly the copy pairs swap_out/swap_in
+    return, clobber freed device blocks on reuse — every resident
+    request's visible contents survive any number of swap round trips."""
+    bm = BlockManager(total_tokens=160, block_size=16, swap_space_blocks=8)
+    dev, host = {}, {}            # block -> payload
+    expect = {}                   # rid -> expected payload list
+    for rid, op, n in ops:
+        if op == 0:              # admit/grow: fresh payloads for new blocks
+            if rid in bm.swapped_tables:
+                continue
+            have = len(bm.tables.get(rid, ()))
+            if bm.allocate(rid, have * 16, n):
+                tbl = bm.tables[rid]
+                exp = expect.setdefault(rid, [])
+                for k in range(have, len(tbl)):
+                    payload = (rid, len(exp))
+                    dev[tbl[k]] = payload     # overwrites any stale tenant
+                    exp.append(payload)
+        elif op == 1:            # free
+            for b in bm.free(rid):
+                dev.pop(b, None)
+            expect.pop(rid, None)
+        elif op == 2:            # swap-out: copy BEFORE device reuse
+            if rid in bm.tables and bm.can_swap_out(rid):
+                for d, h in bm.swap_out(rid):
+                    host[h] = dev.pop(d)
+        else:                    # swap-in
+            if rid in bm.swapped_tables and bm.can_swap_in(rid):
+                for h, d in bm.swap_in(rid):
+                    dev[d] = host.pop(h)
+        # every resident table reads back its own payloads, in order
+        for r, tbl in bm.tables.items():
+            assert [dev[b] for b in tbl] == expect[r], r
+        # every ledger holds the swapped rid's payloads, in order
+        for r, ledger in bm.swapped_tables.items():
+            assert [host[h] for h in ledger] == expect[r], r
+
+
+def test_shared_ref_blocks_are_never_swappable():
+    """Regression (DESIGN §11): a victim holding any ref > 1 block must
+    fall back to recompute — its shared blocks' content must stay
+    device-resident for the other owners."""
+    bm = BlockManager(total_tokens=320, block_size=16, prefix_cache=True,
+                      swap_space_blocks=8)
+    p = toks(40)
+    bm.allocate(1, 0, 41)
+    bm.commit_prefill(1, p, 40)
+    bm.acquire_prefix(2, p)                   # blocks shared, ref == 2
+    bm.allocate(2, 32, 9)
+    assert not bm.can_swap_out(1)
+    assert not bm.can_swap_out(2)
+    bm.free(2)                                # last other ref drops
+    assert bm.can_swap_out(1)
+    pairs = bm.swap_out(1)
+    # swapped-out content leaves the prefix index: a new probe must miss
+    assert bm.acquire_prefix(3, p) == 0
+    assert len(pairs) == 3 and bm.swapped_blocks == 3
