@@ -10,7 +10,7 @@ def csv_out(name: str, us_per_call: float, derived: str) -> None:
 
 
 BENCHES = ("fig3", "table1", "table2", "fig4", "ablation", "burst",
-           "prefix", "swap", "roofline")
+           "prefix", "swap", "tp", "roofline")
 
 
 def main() -> None:
@@ -38,6 +38,8 @@ def main() -> None:
                 from benchmarks.prefix_caching import run
             elif name == "swap":
                 from benchmarks.kv_swap import run
+            elif name == "tp":
+                from benchmarks.tp_serving import run
             else:
                 from benchmarks.roofline import run
             run(csv_out)

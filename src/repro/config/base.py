@@ -274,6 +274,19 @@ class ServeConfig:
     # crossover per victim, "swap" forces swap-out whenever it is possible
     # at all (host space, no shared blocks — else recompute fallback)
     preempt: str = "auto"
+    # mesh-sharded serving (DESIGN §12): device mesh shape for the engine,
+    # last axis = "model" (tensor parallelism over kv-heads / head_dim),
+    # leading axes = ("data",) or ("pod", "data"). () keeps today's
+    # single-device engine. Under a mesh, hbm_budget_bytes / kv_pool_tokens
+    # are PER-CHIP quantities: the pool's token capacity scales with the
+    # model-axis size (each chip holds 1/m of every token's KV bytes).
+    mesh_shape: Tuple[int, ...] = ()
+
+    @property
+    def model_axis_size(self) -> int:
+        """Size of the mesh's "model" (tensor-parallel) axis — by
+        convention the LAST axis of mesh_shape (DESIGN §5/§12)."""
+        return self.mesh_shape[-1] if self.mesh_shape else 1
 
 
 @dataclasses.dataclass(frozen=True)

@@ -57,16 +57,44 @@ def norm_cdf(x: float) -> float:
     return 0.5 * (1.0 + math.erf(x / math.sqrt(2.0)))
 
 
+def kv_shard_factor(cfg: ModelConfig, model_axis: int) -> int:
+    """Effective model-parallel shard count of the serving KV pool
+    (DESIGN §12).
+
+    The pool shards over the "model" axis on kv-heads, falling back to
+    head_dim when kv-heads don't divide (the DESIGN §5 cache rule).
+    Returns 1 — pool unsharded, capacity does not scale — when the axis
+    is trivial, the family is attention-free (no token pool to shard), or
+    neither kv-heads nor head_dim divides the axis. Pure Python so the
+    simulator twin can apply the identical rule without touching jax."""
+    if model_axis <= 1:
+        return 1
+    if cfg.kv_bytes_per_token() == 0:
+        return 1
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    if kv % model_axis == 0 or hd % model_axis == 0:
+        return model_axis
+    return 1
+
+
 @dataclasses.dataclass
 class MemoryModel:
-    """Token-capacity accounting for one architecture on one device budget."""
+    """Token-capacity accounting for one architecture on one device budget.
+
+    Chip-aware under mesh-sharded serving (DESIGN §12): `hbm_budget_bytes`
+    and `eta_tokens` are PER-CHIP quantities, and `model_shards` (the
+    effective model-axis shard count, see `kv_shard_factor`) scales the
+    pool — each chip holds 1/m of every token's KV bytes, so the same
+    per-chip HBM backs m× the tokens. `model_shards = 1` (default) keeps
+    the legacy single-device accounting byte-for-byte."""
 
     cfg: ModelConfig
-    hbm_budget_bytes: int            # M_max: free HBM after params+activations
+    hbm_budget_bytes: int            # M_max per chip: free HBM after params+activations
     eps_m: float = 0.05
     kv_dtype_bytes: int = 2
     block_size: int = 16             # allocator granularity (vLLM-style blocks)
-    eta_tokens: int = 0              # explicit token-pool override (engine)
+    eta_tokens: int = 0              # explicit per-chip token-pool override (engine)
+    model_shards: int = 1            # model-axis shards of the KV pool (DESIGN §12)
 
     def __post_init__(self):
         self.theta = norm_ppf(1.0 - self.eps_m)
@@ -99,12 +127,17 @@ class MemoryModel:
 
     @property
     def eta(self) -> int:
-        """Max concurrent tokens in the KV pool (eq. context, block-rounded)."""
+        """Max concurrent tokens in the KV pool (eq. context, block-rounded).
+
+        Scales with `model_shards`: per-chip budget × shards worth of
+        tokens fit when each token's KV is split over the model axis
+        (DESIGN §12)."""
         if self.eta_tokens:
-            return (self.eta_tokens // self.block_size) * self.block_size
+            tokens = self.eta_tokens * self.model_shards
+            return (tokens // self.block_size) * self.block_size
         if self._bpt == 0:
             return 0
-        tokens = self.hbm_budget_bytes // self._bpt
+        tokens = self.hbm_budget_bytes * self.model_shards // self._bpt
         return (tokens // self.block_size) * self.block_size
 
     @property

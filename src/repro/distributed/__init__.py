@@ -1,2 +1,4 @@
 from repro.distributed.sharding import (param_shardings,  # noqa: F401
-                                        batch_shardings, cache_shardings)
+                                        batch_shardings, cache_shardings,
+                                        serve_cache_shardings,
+                                        serve_param_shardings)

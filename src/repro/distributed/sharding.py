@@ -186,6 +186,18 @@ def batch_shardings(batch_shape: Dict[str, Any], cfg: ModelConfig,
     return jax.tree.map(one, batch_shape)
 
 
+def kv_head_axes(mesh: Mesh, kv: int, hd: int):
+    """Which cache axis takes "model": kv-heads when they divide the axis,
+    head_dim as the fallback, else replicate (DESIGN §5; the same rule
+    `core.memory_model.kv_shard_factor` applies jax-free)."""
+    m = _axis_size(mesh, "model")
+    if kv % m == 0:
+        return "model", None
+    if hd % m == 0:
+        return None, "model"
+    return None, None
+
+
 def cache_shardings(cache_shape, cfg: ModelConfig, mesh: Mesh,
                     seq_shard: bool = False):
     """KV/state cache shardings.
@@ -197,20 +209,12 @@ def cache_shardings(cache_shape, cfg: ModelConfig, mesh: Mesh,
     f = data_axes(mesh)
     fs = f if len(f) > 1 else f[0]
 
-    def kv_head_axes(kv: int, hd: int):
-        m = _axis_size(mesh, "model")
-        if kv % m == 0:
-            return "model", None
-        if hd % m == 0:
-            return None, "model"
-        return None, None
-
     def one(path, leaf):
         name = _path_str(path)
         shape = leaf.shape
         if name in ("k", "v", "cross_k", "cross_v"):
             # (L, B, S, KV, hd)
-            kv_ax, hd_ax = kv_head_axes(shape[3], shape[4])
+            kv_ax, hd_ax = kv_head_axes(mesh, shape[3], shape[4])
             if seq_shard and name in ("k", "v"):
                 spec = P(None, None, "data", kv_ax, hd_ax)
             else:
@@ -281,3 +285,91 @@ def decode_input_shardings(cfg: ModelConfig, mesh: Mesh, batch: int):
         total *= _axis_size(mesh, a)
     spec = P(fs) if batch % total == 0 else P()
     return NamedSharding(mesh, spec)
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded serving (DESIGN §12)
+
+
+def serve_param_shardings(params, cfg: ModelConfig, mesh: Mesh):
+    """Serving twin of `param_shardings`: the same §5 name-based rules,
+    with every FSDP/data axis replaced by replication. Serving carries no
+    optimizer state, so params replicate over ("pod",) "data" (plain data
+    parallelism) and shard over "model" only — tensor parallelism
+    (DESIGN §12). Works on concrete params or a shape pytree."""
+
+    def strip(ax):
+        if isinstance(ax, tuple):
+            keep = tuple(a for a in ax if a == "model")
+            return keep[0] if keep else None
+        return ax if ax == "model" else None
+
+    def one(path, leaf):
+        name = _path_str(path)
+        spec = _spec_for(name, leaf.ndim, cfg, ("data",))
+        spec = P(*(strip(ax) for ax in spec))
+        return NamedSharding(mesh, _validate(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def serve_cache_shardings(cache, cfg: ModelConfig, mesh: Mesh):
+    """Serving-cache shardings over the "model" axis (DESIGN §12).
+
+    Covers both layouts with one rule set — the leading axes differ but
+    the trailing (KV, hd) axes are shared:
+
+      * paged pools     k/v (L, NB, bs, KV, hd), pos (NB, bs)
+      * contiguous rows k/v (L, B, S, KV, hd),   pos (B, S)
+      * cross-KV        (Lc, slots, enc_len, KV, hd)
+
+    K/V shard on kv-heads ("model"), head_dim fallback (`kv_head_axes`);
+    the pos map and slot bookkeeping replicate; per-slot recurrent state
+    shards on its channel axis when divisible. Batch/block axes stay
+    unsharded — serving batches are bucketized and dynamic, so rows
+    replicate over "data"."""
+
+    def one(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        if name in ("k", "v", "cross_k", "cross_v"):
+            kv_ax, hd_ax = kv_head_axes(mesh, shape[-2], shape[-1])
+            spec = P(*((None,) * (leaf.ndim - 2) + (kv_ax, hd_ax)))
+        elif name == "conv":                       # (L, slots, W-1, ch)
+            spec = P(None, None, None, "model")
+        elif name == "rec":                        # (L, slots, w)
+            spec = P(None, None, "model")
+        else:                                      # pos / ssm / misc
+            spec = P()
+        return NamedSharding(mesh, _validate(spec, shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+# The engine's ambient serving mesh (DESIGN §12): set around every jit'd
+# serving step so model code (layers.self_attention_paged) can route the
+# paged flash-decode kernel through its shard_map wrapper. A module slot,
+# not a Mesh context: training meshes must NOT trigger the serving path.
+_SERVING_MESH = None
+
+
+def set_serving_mesh(mesh):
+    """Install `mesh` as the ambient serving mesh; returns the previous
+    value so callers can restore it (engines with and without a mesh can
+    interleave in one process)."""
+    global _SERVING_MESH
+    prev = _SERVING_MESH
+    _SERVING_MESH = mesh
+    return prev
+
+
+def serving_mesh():
+    return _SERVING_MESH
+
+
+def serving_model_axis() -> int:
+    """Size of the ambient serving mesh's "model" axis (1 = no TP)."""
+    m = _SERVING_MESH
+    if m is None or "model" not in m.axis_names:
+        return 1
+    return int(m.shape["model"])

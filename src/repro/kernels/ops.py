@@ -44,6 +44,45 @@ def paged_decode_attention(q, k_pool, v_pool, q_pos, kpos_pool, tables, *,
                                          interpret=not _on_tpu())
 
 
+def paged_decode_attention_tp(q, k_pool, v_pool, q_pos, kpos_pool, tables, *,
+                              mesh, window: int = 0, use_kernel: bool = True):
+    """Tensor-parallel paged flash decode via shard_map (DESIGN §12).
+
+    The paged kernel's grid is (batch, kv_head, table_slot) — per-kv-head
+    work is fully independent — so TP is a shard_map over the "model"
+    axis: each shard streams its kv-head slice of the K/V pools against
+    its q-head slice (heads are kv-major, so H/m q-heads pair with KV/m
+    kv-heads), with the block table and pos map replicated. No collective
+    runs inside the kernel, which keeps shard outputs bitwise identical
+    to the single-device kernel. Requires KV % model_axis == 0 — head_dim
+    sharding would split the softmax contraction and is storage-only
+    (callers fall back to the gathered single-device path)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    KV = k_pool.shape[2]
+    m = int(mesh.shape["model"])
+    if KV % m != 0:
+        raise ValueError(f"kv heads {KV} not divisible by model axis {m}")
+
+    def local(q, kp, vp, qp, pp, tb):
+        if not use_kernel:
+            return ref.paged_decode_attention_ref(q, kp, vp, qp, pp, tb,
+                                                  window=window)
+        return paged_decode_attention_kernel(q, kp, vp, qp, pp, tb,
+                                             window=window,
+                                             interpret=not _on_tpu())
+
+    head_spec = P(None, "model", None)
+    pool_spec = P(None, None, "model", None)
+    return shard_map(
+        local, mesh,
+        in_specs=(head_spec, pool_spec, pool_spec, P(None), P(None, None),
+                  P(None, None)),
+        out_specs=head_spec, check_rep=False,
+    )(q, k_pool, v_pool, q_pos, kpos_pool, tables)
+
+
 @functools.partial(jax.jit, static_argnames=("window", "causal", "use_kernel",
                                              "block_q", "block_k"))
 def flash_attention(q, k, v, q_pos, k_pos, *, window: int = 0,

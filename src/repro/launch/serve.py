@@ -3,20 +3,32 @@ variants on CPU; the same engine is the production template for TPU).
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
         --policy combined --sla-ms 200 --requests 20
+
+Every flag below is documented in the README's "Serving CLI flags" table;
+`tests/test_docs.py` fails if a flag is added here without a table row.
+
+jax is imported only AFTER argument parsing: `--mesh` (DESIGN §12) must be
+able to provision forced host devices for CPU test meshes, which XLA reads
+at first jax init.
 """
 from __future__ import annotations
 
 import argparse
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.config.base import ServeConfig
 from repro.config.registry import get_config, list_archs
-from repro.models.model import build_model, default_enc_len
-from repro.serving.cost_model import CostModel, PROFILES
-from repro.serving.engine import Engine
+from repro.launch.mesh import ensure_cpu_devices
+from repro.serving.cost_model import PROFILES
+
+
+def parse_mesh(spec: str):
+    """"2,2" / "2x2" -> (2, 2); last axis is "model" (DESIGN §12)."""
+    parts = [p for p in spec.replace("x", ",").split(",") if p]
+    shape = tuple(int(p) for p in parts)
+    if not shape or any(s < 1 for s in shape) or len(shape) > 3:
+        raise argparse.ArgumentTypeError(
+            f"--mesh wants 1-3 comma-separated sizes (data,model), got {spec!r}")
+    return shape
 
 
 def main():
@@ -63,7 +75,37 @@ def main():
                     choices=sorted(PROFILES),
                     help="hardware profile the 'auto' crossover prices "
                          "PCIe vs re-prefill against (DESIGN §11)")
+    # mesh-sharded serving (DESIGN §12)
+    ap.add_argument("--mesh", type=parse_mesh, default=None,
+                    metavar="DATA,MODEL",
+                    help="run the engine tensor-parallel on this device "
+                         "mesh, e.g. '1,2' or '2x2'; the LAST axis is the "
+                         "'model' (TP) axis and --pool-tokens becomes a "
+                         "PER-CHIP budget (DESIGN §12). On CPU, forced "
+                         "host devices are provisioned automatically.")
     args = ap.parse_args()
+
+    if args.mesh:
+        n = 1
+        for s in args.mesh:
+            n *= s
+        ensure_cpu_devices(n)
+
+    import jax
+
+    if args.mesh and len(jax.devices()) < n:
+        raise SystemExit(
+            f"--mesh {','.join(map(str, args.mesh))} needs {n} devices but "
+            f"jax sees {len(jax.devices())}. On CPU this usually means "
+            f"XLA_FLAGS already pins --xla_force_host_platform_device_count "
+            f"below {n} (ensure_cpu_devices won't override it) — unset it "
+            f"or raise it to {n}.")
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models.model import build_model, default_enc_len
+    from repro.serving.cost_model import CostModel
+    from repro.serving.engine import Engine
 
     cfg = get_config(args.arch, args.variant)
     model = build_model(cfg, dtype=jnp.float32 if args.variant == "reduced"
@@ -79,7 +121,8 @@ def main():
                         paged_kv=args.paged,
                         prefix_cache=args.prefix_cache,
                         swap_space_blocks=args.swap_space,
-                        preempt=args.preempt)
+                        preempt=args.preempt,
+                        mesh_shape=args.mesh or ())
     enc_len = 16 if default_enc_len(cfg) else 0
     eng = Engine(model, params, serve, max_context=args.max_context,
                  buckets=tuple(2 ** i for i in range(0, args.b_max.bit_length())),

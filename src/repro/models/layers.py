@@ -223,13 +223,31 @@ def self_attention_paged(p, x, positions, pool_k, pool_v, pool_pos, tables,
     pool_k = _pool_write(pool_k, flat, k)
     pool_v = _pool_write(pool_v, flat, v)
     pool_pos = _pool_write(pool_pos, flat, positions)
-    if T == 1 and use_pallas():
+    # kernel routing under a serving mesh (DESIGN §12), derived from the
+    # SAME rule that placed the pool (`kv_head_axes`): sharded on
+    # kv-heads -> shard_map'd TP kernel; sharded on head_dim -> the
+    # Pallas custom call cannot partition it (GSPMD would all-gather the
+    # whole pool onto every chip), so take the gather-view fallback
+    # whose jnp gathers stay sharded; replicated -> the single-device
+    # kernel is safe.
+    from repro.distributed.sharding import (kv_head_axes, serving_mesh,
+                                            serving_model_axis)
+    kv_ax = hd_ax = None
+    if serving_model_axis() > 1:
+        kv_ax, hd_ax = kv_head_axes(serving_mesh(), pool_k.shape[2],
+                                    pool_k.shape[3])
+    if T == 1 and use_pallas() and hd_ax is None:
         # paged flash-decode Pallas kernel: the kv-block grid axis walks the
         # block table (kernels/decode_attention.py, DESIGN §9)
         from repro.kernels import ops
-        out = ops.paged_decode_attention(q[:, 0], pool_k, pool_v,
-                                         positions[:, 0], pool_pos, tables,
-                                         window=window)
+        if kv_ax is not None:
+            out = ops.paged_decode_attention_tp(
+                q[:, 0], pool_k, pool_v, positions[:, 0], pool_pos, tables,
+                mesh=serving_mesh(), window=window)
+        else:
+            out = ops.paged_decode_attention(q[:, 0], pool_k, pool_v,
+                                             positions[:, 0], pool_pos,
+                                             tables, window=window)
         out = out.reshape(B, 1, -1)
     else:
         kview, vview, kpos = paged_view(pool_k, pool_v, pool_pos, tables)

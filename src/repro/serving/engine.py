@@ -27,7 +27,7 @@ import numpy as np
 from repro.config.base import ModelConfig, ServeConfig
 from repro.core.batching import bucketize, make_policy
 from repro.core.lanes import lane_order, pack_chunks
-from repro.core.memory_model import MemoryModel
+from repro.core.memory_model import MemoryModel, kv_shard_factor
 from repro.core.telemetry import Telemetry
 from repro.models.model import Model
 from repro.serving.cost_model import CostModel, PROFILES
@@ -114,7 +114,7 @@ class Engine:
                  buckets: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64),
                  prefill_chunk: int = 32, enc_len: int = 0, seed: int = 0,
                  temperature: float = 0.0,
-                 cost: Optional[CostModel] = None):
+                 cost: Optional[CostModel] = None, mesh=None):
         self.model = model
         self.cfg: ModelConfig = model.cfg
         self.serve = serve
@@ -128,14 +128,33 @@ class Engine:
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
 
+        # mesh-sharded serving (DESIGN §12): params tensor-parallel over
+        # "model" (§5 name rules, data axes replicated), the KV pool
+        # sharded over "model" on kv-heads — per-chip pool quantities
+        # scale by the effective shard count
+        if mesh is None and serve.mesh_shape:
+            from repro.launch.mesh import make_serving_mesh
+            mesh = make_serving_mesh(serve.mesh_shape)
+        self.mesh = mesh
+        self.model_shards = 1
+        if mesh is not None and "model" in mesh.axis_names:
+            self.model_shards = kv_shard_factor(self.cfg,
+                                                int(mesh.shape["model"]))
+
         # n_prefill_lanes spare physical rows: PD-fusion prefilling requests
         # live outside every decode bucket so masked decode steps can never
         # touch their (stateful) cache rows (DESIGN §6)
         self.n_lanes = max(1, serve.n_prefill_lanes)
         eta = serve.kv_pool_tokens or self.max_slots * max_context
+        # per-chip scaling (DESIGN §12) applies to EXPLICIT budgets only:
+        # the slot-derived fallback is already the maximum the block
+        # tables can address, so scaling it by the shard count would
+        # allocate pool blocks no table could ever reference
+        pool_shards = self.model_shards if serve.kv_pool_tokens else 1
         self.mem = MemoryModel(self.cfg, hbm_budget_bytes=0,
                                eps_m=serve.eps_m,
-                               block_size=serve.block_size, eta_tokens=eta)
+                               block_size=serve.block_size, eta_tokens=eta,
+                               model_shards=pool_shards)
         self.paged = serve.paged_kv
         # ref-counted prefix sharing (DESIGN §10): needs the paged pool (the
         # contiguous layout has no shareable physical blocks) and a family
@@ -164,14 +183,17 @@ class Engine:
             # physically paged cache (DESIGN §9): K/V pools sized by the
             # allocator's block count — BlockManager's tables ARE the
             # storage map. Requests pin a per-slot state row for life.
-            self.cache = model.init_paged_cache(
+            cache_fn = lambda: model.init_paged_cache(  # noqa: E731
                 self.n_slots, self.mem.num_blocks, serve.block_size,
                 enc_len=enc_len)
             self._free_slots = list(range(self.n_slots))
         else:
-            self.cache = model.init_cache(self.n_slots, max_context,
-                                          enc_len=enc_len,
-                                          prefill_chunk=prefill_chunk)
+            cache_fn = lambda: model.init_cache(  # noqa: E731
+                self.n_slots, max_context, enc_len=enc_len,
+                prefill_chunk=prefill_chunk)
+        self.cache = self._init_cache_on_mesh(cache_fn)
+        if self.mesh is not None:
+            self._shard_state()
         self.tel = Telemetry()
         self.policy = make_policy(serve, self.mem)
 
@@ -229,23 +251,71 @@ class Engine:
         # chunks each fused interval; each entry <= that interval's budget)
         self.prefill_tokens_trace: List[int] = []
 
-        self._decode_jit = jax.jit(self._decode_fn)
-        self._prefill_jit = jax.jit(self._prefill_fn)
-        self._prefill_lanes_jit = jax.jit(self._prefill_lanes_fn)
+        self._decode_jit = self._mesh_call(jax.jit(self._decode_fn))
+        self._prefill_jit = self._mesh_call(jax.jit(self._prefill_fn))
+        self._prefill_lanes_jit = self._mesh_call(
+            jax.jit(self._prefill_lanes_fn))
         # donate the cache operand (arg 5 in both paged fns) so XLA updates
         # the K/V pools in place instead of copying them every step — the
         # whole point of the paged layout. CPU doesn't implement donation
         # (it would just warn), so only donate on accelerators.
         donate = () if jax.default_backend() == "cpu" else (5,)
-        self._decode_paged_jit = jax.jit(self._decode_paged_fn,
-                                         donate_argnums=donate)
-        self._prefill_paged_jit = jax.jit(self._prefill_paged_fn,
-                                          donate_argnums=donate)
+        self._decode_paged_jit = self._mesh_call(
+            jax.jit(self._decode_paged_fn, donate_argnums=donate))
+        self._prefill_paged_jit = self._mesh_call(
+            jax.jit(self._prefill_paged_fn, donate_argnums=donate))
         # device-table cache keyed by (call-site, shape): fused intervals
         # alternate between the prefill-group and decode-bucket tables
         # (which can share a shape), so a single slot would thrash
         self._tables_dev: Dict[Tuple[str, Tuple[int, int]],
                                Tuple[np.ndarray, jnp.ndarray]] = {}
+
+    # -- mesh-sharded serving (DESIGN §12) -------------------------------------
+    def _init_cache_on_mesh(self, cache_fn):
+        """Allocate the serving cache — directly under its mesh shardings
+        when a mesh is set. The paged pool is `model_shards`× the per-chip
+        budget, so materializing it on one device first (then resharding)
+        would OOM exactly the chips §12 is sized for; jit with
+        out_shardings creates each shard in place."""
+        if self.mesh is None:
+            return cache_fn()
+        from repro.distributed.sharding import serve_cache_shardings
+        shardings = serve_cache_shardings(
+            jax.eval_shape(cache_fn), self.cfg, self.mesh)
+        with self.mesh:
+            return jax.jit(cache_fn, out_shardings=shardings)()
+
+    def _shard_state(self):
+        """Place params on the mesh: TP over "model" (§5 rules, data axes
+        replicated). Params arrive caller-materialized, so this is a
+        reshard (`device_put`); production callers serving models that
+        don't fit one chip should init params under
+        `serve_param_shardings` to begin with (the cache never needs this
+        — `_init_cache_on_mesh` allocates it sharded)."""
+        from repro.distributed.sharding import serve_param_shardings
+        self.params = jax.device_put(
+            self.params,
+            serve_param_shardings(self.params, self.cfg, self.mesh))
+
+    def _mesh_call(self, jf):
+        """Wrap a jit'd step so it runs inside the mesh context with the
+        ambient serving mesh installed (routes the paged kernel through
+        its shard_map wrapper at trace time — DESIGN §12). No-op without
+        a mesh: the single-device engine is byte-for-byte untouched."""
+        if self.mesh is None:
+            return jf
+
+        from repro.distributed import sharding as _sharding
+
+        def call(*args):
+            prev = _sharding.set_serving_mesh(self.mesh)
+            try:
+                with self.mesh:
+                    return jf(*args)
+            finally:
+                _sharding.set_serving_mesh(prev)
+
+        return call
 
     # -- jit'd steps ----------------------------------------------------------
     def _decode_fn(self, params, tokens, seq_lens, cache):
@@ -988,6 +1058,10 @@ class Engine:
         tp, _ = self.tel.ttft_prefill.get()
         return {
             "throughput_tok_s": self.total_decoded / max(el, 1e-9),
+            # mesh-sharded serving (DESIGN §12): effective model-axis
+            # shards of the KV pool and the resulting token capacity
+            "model_shards": float(self.model_shards),
+            "pool_tokens": float(self.mem.eta),
             "decode_steps": self.decode_steps,
             "mean_batch": (sum(self.batch_trace) / len(self.batch_trace))
             if self.batch_trace else 0.0,

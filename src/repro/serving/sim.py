@@ -33,7 +33,7 @@ from typing import Dict, List, Optional
 from repro.config.base import ModelConfig, ServeConfig
 from repro.core.batching import BatchDecision, Policy, bucketize, make_policy
 from repro.core.lanes import lane_order, pack_chunks
-from repro.core.memory_model import MemoryModel
+from repro.core.memory_model import MemoryModel, kv_shard_factor
 from repro.core.telemetry import Telemetry
 from repro.serving.cost_model import CostModel
 from repro.serving.kv_cache import (BlockManager, prefix_cache_supported,
@@ -134,11 +134,19 @@ class ServingSimulator:
         # semantics as the engine's spare physical rows
         self.lanes: List[Optional[Request]] = [None] * self.n_lanes
 
-        pool_bytes = serve.hbm_budget_bytes or cost.kv_pool_bytes()
+        # mesh-sharded serving (DESIGN §12): mirror the engine's chip-aware
+        # pool — serve budgets are per-chip under a mesh and the effective
+        # model-axis shard count scales the token capacity. The cost
+        # model's derived budget already aggregates every chip, so it is
+        # brought back to per-chip before MemoryModel re-scales it.
+        self.model_shards = kv_shard_factor(cfg, serve.model_axis_size)
+        pool_bytes = serve.hbm_budget_bytes \
+            or cost.kv_pool_bytes() // self.model_shards
         self.mem = MemoryModel(cfg, pool_bytes, eps_m=serve.eps_m,
                                block_size=serve.block_size,
-                               eta_tokens=serve.kv_pool_tokens)
-        eta = serve.kv_pool_tokens or self.mem.eta
+                               eta_tokens=serve.kv_pool_tokens,
+                               model_shards=self.model_shards)
+        eta = self.mem.eta
         if eta == 0:  # attention-free: cap by request state instead
             eta = self.mem.max_requests_state_only() * serve.block_size
         # prefix sharing (DESIGN §10): same family gate as the engine so

@@ -1,12 +1,16 @@
-"""Docs stay honest: README/DESIGN links resolve, DESIGN section numbers
-match every `DESIGN §N` reference in source docstrings, and the quickstart
-entry points exist. Run standalone or as the CI docs link-check step."""
+"""Docs stay honest: README/docs links resolve, DESIGN section numbers
+match every `DESIGN §N` reference in source docstrings, every serve CLI
+flag has a README table row, every benchmark runner key and BENCH_*.json
+artifact is documented in docs/BENCHMARKS.md, and the quickstart entry
+points exist. Run standalone or as the CI docs link-check step."""
 import re
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 DESIGN = ROOT / "docs" / "DESIGN.md"
+BENCHMARKS_MD = ROOT / "docs" / "BENCHMARKS.md"
 README = ROOT / "README.md"
+ALL_DOCS = (README,) + tuple(sorted((ROOT / "docs").glob("*.md")))
 
 
 def design_sections():
@@ -22,8 +26,8 @@ def test_design_exists_with_numbered_sections():
     secs = design_sections()
     # the sections the issues demand: controller stack, memory model
     # (eq. 12/14), bucketized static shapes, PD fusion, paged KV, prefix
-    # sharing, and the two-tier swap space
-    assert {"1", "2", "3", "6", "9", "10", "11"} <= secs, secs
+    # sharing, the two-tier swap space, and mesh-sharded serving
+    assert {"1", "2", "3", "6", "9", "10", "11", "12"} <= secs, secs
 
 
 def test_source_design_references_resolve():
@@ -46,8 +50,9 @@ def _md_links(path: Path):
 
 
 def test_markdown_links_resolve():
+    """Link-check over README and every docs/*.md (the CI docs job)."""
     broken = []
-    for md in (README, DESIGN):
+    for md in ALL_DOCS:
         for target in _md_links(md):
             if target.startswith(("http://", "https://", "mailto:")):
                 continue
@@ -69,10 +74,61 @@ def test_readme_referenced_paths_exist():
     assert not missing, f"README references missing files: {missing}"
 
 
-def test_design_referenced_paths_exist():
-    text = DESIGN.read_text()
+def test_docs_referenced_paths_exist():
     missing = []
-    for m in re.finditer(r"`([\w\-/\.]+\.(?:py|md|txt))`", text):
-        if not (ROOT / m.group(1)).exists():
-            missing.append(m.group(1))
-    assert not missing, f"DESIGN references missing files: {missing}"
+    for md in ALL_DOCS:
+        for m in re.finditer(r"`([\w\-/\.]+\.(?:py|md|txt))`",
+                             md.read_text()):
+            if not (ROOT / m.group(1)).exists():
+                missing.append((md.name, m.group(1)))
+    assert not missing, f"docs reference missing files: {missing}"
+
+
+# ---------------------------------------------------------------------------
+# flag / runner-key / artifact sync (the next undocumented one fails CI)
+
+
+def serve_flags():
+    """Every --flag registered by launch/serve.py's argparse."""
+    text = (ROOT / "src" / "repro" / "launch" / "serve.py").read_text()
+    return sorted(set(re.findall(r"add_argument\(\s*\"(--[\w-]+)\"", text)))
+
+
+def test_every_serve_flag_documented_in_readme():
+    """The README's serving-CLI table must carry a row for every flag
+    `launch/serve.py` registers — catches the next undocumented flag."""
+    text = README.read_text()
+    rows = set(re.findall(r"^\|\s*`(--[\w-]+)`", text, re.M))
+    flags = serve_flags()
+    assert flags, "no serve flags parsed — did serve.py move?"
+    missing = [f for f in flags if f not in rows]
+    assert not missing, f"serve flags missing from the README table: {missing}"
+
+
+def runner_keys():
+    """The BENCHES tuple in benchmarks/run.py."""
+    text = (ROOT / "benchmarks" / "run.py").read_text()
+    m = re.search(r"BENCHES\s*=\s*\(([^)]*)\)", text)
+    assert m, "BENCHES tuple not found in benchmarks/run.py"
+    return sorted(re.findall(r"\"(\w+)\"", m.group(1)))
+
+
+def test_every_runner_key_documented():
+    """docs/BENCHMARKS.md must document every benchmarks/run.py key."""
+    text = BENCHMARKS_MD.read_text()
+    keys = runner_keys()
+    assert keys, "no runner keys parsed"
+    missing = [k for k in keys if f"`{k}`" not in text]
+    assert not missing, f"runner keys missing from BENCHMARKS.md: {missing}"
+
+
+def test_every_bench_artifact_documented():
+    """Every BENCH_*.json a benchmark writes must have a schema section
+    in docs/BENCHMARKS.md."""
+    artifacts = set()
+    for py in (ROOT / "benchmarks").glob("*.py"):
+        artifacts.update(re.findall(r"(BENCH_\w+\.json)", py.read_text()))
+    assert artifacts, "no BENCH artifacts found under benchmarks/"
+    text = BENCHMARKS_MD.read_text()
+    missing = [a for a in sorted(artifacts) if a not in text]
+    assert not missing, f"artifacts missing from BENCHMARKS.md: {missing}"

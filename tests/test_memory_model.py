@@ -4,7 +4,7 @@ import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.config.registry import get_config
-from repro.core.memory_model import MemoryModel
+from repro.core.memory_model import MemoryModel, kv_shard_factor
 
 CFG = get_config("granite-3-8b")
 
@@ -102,3 +102,51 @@ def test_fixed_bytes_per_request():
     fixed = m.fixed_bytes_per_request(enc_len=1024)
     # 12 decoder layers of cross KV at 1024 positions
     assert fixed == 2 * 12 * 1024 * 16 * 64 * 2
+
+
+# ---------------------------------------------------------------------------
+# chip-aware pool under mesh-sharded serving (DESIGN §12)
+
+
+def test_eta_scales_with_model_shards():
+    """Per-chip HBM budget × model-axis shards worth of tokens fit when
+    each token's KV is split over the model axis."""
+    one = make(8)
+    for m in (2, 4):
+        sharded = MemoryModel(CFG, int(8 * 2**30), eps_m=0.05, model_shards=m)
+        # scaling happens before block rounding: within one block of m×
+        assert m * one.eta <= sharded.eta <= m * one.eta + m * one.block_size
+        assert sharded.eta % sharded.block_size == 0
+        # the §7 watermark (num_blocks // 100) sees the sharded pool
+        assert sharded.num_blocks // 100 >= m * (one.num_blocks // 100)
+
+
+def test_eta_tokens_override_is_per_chip():
+    one = MemoryModel(CFG, 0, eta_tokens=256)
+    two = MemoryModel(CFG, 0, eta_tokens=256, model_shards=2)
+    assert one.eta == 256 and two.eta == 512
+
+
+def test_kv_shard_factor_gating():
+    # granite-3-8b full: 8 kv heads, head_dim 128
+    assert kv_shard_factor(CFG, 1) == 1
+    assert kv_shard_factor(CFG, 2) == 2           # kv heads divide
+    assert kv_shard_factor(CFG, 8) == 8
+    assert kv_shard_factor(CFG, 16) == 16         # head_dim fallback (8 % 16)
+    assert kv_shard_factor(CFG, 3) == 1           # neither divides: no scale
+    # attention-free SSM: no token pool to shard — capacity must not scale
+    ssm = get_config("mamba2-2.7b")
+    assert kv_shard_factor(ssm, 4) == 1
+    m = MemoryModel(ssm, 8 * 2**30, model_shards=kv_shard_factor(ssm, 4))
+    assert m.eta == 0
+
+
+def test_b_mem_sees_sharded_pool():
+    """Alg 1's capacity rule admits ~m× the requests at fixed per-chip
+    HBM when the pool shards m ways."""
+    one = make(8)
+    two = MemoryModel(CFG, int(8 * 2**30), eps_m=0.05, model_shards=2)
+    b1 = one.b_mem_closed_form(512.0, 128.0 ** 2)
+    b2 = two.b_mem_closed_form(512.0, 128.0 ** 2)
+    assert b2 > b1
+    assert abs(b2 - 2 * b1) <= max(4, 0.02 * b2)
