@@ -32,6 +32,6 @@ def run(csv_out) -> None:
         res = sim.run()
         us = (time.perf_counter() - t0) * 1e6
         csv_out(f"ablation_epsM_{eps}", us,
-                f"tput={res.throughput:.0f}tok/s "
+                f"tput={res.throughput_tok_s:.0f}tok/s "
                 f"mean_batch={res.mean_batch:.0f} "
                 f"preempt={res.preemptions} oom={res.oom_events}")

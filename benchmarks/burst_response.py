@@ -125,7 +125,7 @@ def run(csv_out) -> None:
         bt = res.batch_trace
         peak = max(bt) if bt else 0
         csv_out(f"burst_{policy}", us,
-                f"tput={res.throughput:.0f}tok/s mean_batch={res.mean_batch:.0f} "
+                f"tput={res.throughput_tok_s:.0f}tok/s mean_batch={res.mean_batch:.0f} "
                 f"peak_batch={peak} preempt={res.preemptions} "
                 f"oom={res.oom_events} ttft_p90={res.ttft_p90_s:.1f}s")
     # PD-fusion lane sweep (DESIGN §6)
@@ -134,11 +134,11 @@ def run(csv_out) -> None:
         res = run_lanes(n_lanes)
         us = (time.perf_counter() - t0) * 1e6
         csv_out(f"burst_fused_lanes{n_lanes}", us,
-                f"tput={res.throughput:.0f}tok/s "
+                f"tput={res.throughput_tok_s:.0f}tok/s "
                 f"mean_batch={res.mean_batch:.1f} "
                 f"ttft_mean={res.ttft_mean_s:.2f}s "
-                f"ttft_queue={res.ttft_queue_mean_s:.2f}s "
-                f"ttft_prefill={res.ttft_prefill_mean_s:.2f}s "
+                f"ttft_queue={res.ttft_queue_s_mean:.2f}s "
+                f"ttft_prefill={res.ttft_prefill_s_mean:.2f}s "
                 f"lane_occ={res.prefill_lane_occupancy:.2f} "
                 f"tokens={res.total_tokens}")
     # real-engine paged-vs-contiguous comparison (DESIGN §9)

@@ -132,7 +132,7 @@ def run_swap_compare(out_json: str = "BENCH_swap.json", csv_out=None) -> dict:
                                           cv_out=1.0), seed=1)
         sim.add_requests(96)
         res = sim.run()
-        return {"throughput_tok_s": res.throughput,
+        return {"throughput_tok_s": res.throughput_tok_s,
                 "tbt_ms_mean": res.tbt_ms_mean,
                 "preemptions": res.preemptions,
                 "swap_outs": res.swap_outs,

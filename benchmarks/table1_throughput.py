@@ -65,10 +65,10 @@ def run(csv_out) -> None:
         dy = run_row(cfg_fn, chips, mi, mo, n, fixed, "memory", DYNAMIC_BMAX,
                      fig3_law=fig3)
         us = (time.perf_counter() - t0) * 1e6
-        gain = (dy.throughput / max(st.throughput, 1e-9) - 1) * 100
+        gain = (dy.throughput_tok_s / max(st.throughput_tok_s, 1e-9) - 1) * 100
         csv_out(
             f"table1_{label}", us,
-            f"static={st.throughput:.0f}tok/s dynamic={dy.throughput:.0f}tok/s "
+            f"static={st.throughput_tok_s:.0f}tok/s dynamic={dy.throughput_tok_s:.0f}tok/s "
             f"gain={gain:+.1f}% paper={paper:+.1f}% "
             f"b_static={st.mean_batch:.0f} b_dyn={dy.mean_batch:.0f} "
             f"preempt={st.preemptions}/{dy.preemptions}")
@@ -81,7 +81,7 @@ def run(csv_out) -> None:
         us = (time.perf_counter() - t0) * 1e6
         csv_out(
             f"table1_{label}_fused_lanes{n_lanes}", us,
-            f"tput={fu.throughput:.0f}tok/s b={fu.mean_batch:.0f} "
+            f"tput={fu.throughput_tok_s:.0f}tok/s b={fu.mean_batch:.0f} "
             f"ttft_mean={fu.ttft_mean_s:.2f}s "
             f"lane_occ={fu.prefill_lane_occupancy:.2f} "
             f"preempt={fu.preemptions}")

@@ -67,8 +67,8 @@ def run(csv_out) -> None:
         cap_s, res_s = capacity(cfg_fn, chips, mi, mo, n, chunked, "static")
         cap_d, res_d = capacity(cfg_fn, chips, mi, mo, n, chunked, "combined")
         us = (time.perf_counter() - t0) * 1e6
-        tp_s = res_s.throughput if res_s else 0.0
-        tp_d = res_d.throughput if res_d else 0.0
+        tp_s = res_s.throughput_tok_s if res_s else 0.0
+        tp_d = res_d.throughput_tok_s if res_d else 0.0
         gain = (tp_d / max(tp_s, 1e-9) - 1) * 100
         csv_out(
             f"table2_{label}", us,

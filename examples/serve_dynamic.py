@@ -48,7 +48,7 @@ def simulator_comparison():
             cost, LengthDist(mean_in=128, mean_out=128, fixed=True), seed=0)
         sim.add_requests(600)
         res = sim.run()
-        print(f"  {policy:8s} tput={res.throughput:9.1f} tok/s "
+        print(f"  {policy:8s} tput={res.throughput_tok_s:9.1f} tok/s "
               f"mean_batch={res.mean_batch:.0f} tbt={res.tbt_ms_mean:.1f}ms")
 
 

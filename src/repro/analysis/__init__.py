@@ -1,0 +1,9 @@
+"""Flight-rules static analysis (DESIGN §13): repo-specific AST lint rules
+plus a jaxpr trace auditor, run via `python -m repro.analysis`."""
+from repro.analysis.framework import (Allow, Finding, Report, Tree, RULES,
+                                      apply_allowlist, rule, run)
+from repro.analysis import rules_ast, rules_repo  # noqa: F401  (register rules)
+from repro.analysis.allowlist import ALLOWLIST
+
+__all__ = ["Allow", "Finding", "Report", "Tree", "RULES", "ALLOWLIST",
+           "apply_allowlist", "rule", "run"]

@@ -1,0 +1,54 @@
+"""CLI: `python -m repro.analysis [--report PATH] [--no-jaxpr] [--root DIR]`.
+
+Runs every registered AST rule over the repo tree, applies the justified
+allowlist, optionally runs the jaxpr trace audit for every family config,
+and exits non-zero on any surviving finding or allowlist hygiene problem.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+from pathlib import Path
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--report", metavar="PATH", default=None,
+                    help="write the JSON report here (CI artifact)")
+    ap.add_argument("--no-jaxpr", action="store_true",
+                    help="skip the jaxpr trace audit (no jax import)")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: derived from this package)")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import ALLOWLIST, Tree, run
+    root = Path(args.root) if args.root else \
+        Path(__file__).resolve().parents[3]
+    tree = Tree(root=root)
+    report = run(tree, allows=ALLOWLIST)
+
+    if not args.no_jaxpr:
+        from repro.analysis.jaxpr_audit import run_jaxpr_audit
+        audited = run_jaxpr_audit()
+        report.per_rule["jaxpr-audit"] = len(audited)
+        report.findings.extend(audited)
+
+    for f in report.problems:
+        print(f"PROBLEM {f}", file=sys.stderr)
+    for f in report.findings:
+        print(f, file=sys.stderr)
+    if args.report:
+        Path(args.report).write_text(report.to_json())
+    n_rules = len(report.per_rule)
+    if report.ok:
+        print(f"analysis OK: {n_rules} rules over "
+              f"{report.checked_files} files, 0 findings")
+        return 0
+    print(f"analysis FAILED: {len(report.findings)} finding(s), "
+          f"{len(report.problems)} allowlist problem(s)", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,140 @@
+"""AST lint rules over the serving stack (DESIGN §13).
+
+host-sync
+    `jax.block_until_ready` / `jax.device_get` / `.item()` /
+    `np.asarray`-on-a-device-value force a host<->device synchronization.
+    Inside `src/repro/serving/` every such site sits on the scheduling
+    critical path — the paper's step-overhead term and the host-side stalls
+    "Mind the Memory Gap" measures — so each one must be an allowlisted,
+    justified sync point. The allowlist IS the work-list for the async
+    dispatch-ahead engine loop (ROADMAP item 1): overlapping interval N+1's
+    admission with interval N's device step means deleting these entries
+    one by one.
+
+allocator-encapsulation
+    BlockManager's refcounts, free lists, block tables, prefix index and
+    swap ledgers may only be mutated inside `kv_cache.py`. The PR 2
+    allocator-drift bug family (state-only leaks, failed-grow drift) was
+    exactly out-of-band mutation of this state; reads are fine, writes
+    anywhere else are structurally banned.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.framework import (Finding, Tree, attr_chain, dotted_name,
+                                      qualified_scopes, rule)
+
+# -- host-sync ---------------------------------------------------------------
+
+#: dotted callables that force a device->host sync
+_SYNC_CALLS = {
+    "jax.block_until_ready": "jax.block_until_ready",
+    "jax.device_get": "jax.device_get",
+}
+
+#: numpy coercions that pull a device array to host when fed one
+_NP_COERCE = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+
+#: argument node types that are host-side literals, not device values
+_HOST_LITERAL = (ast.List, ast.Tuple, ast.ListComp, ast.Constant,
+                 ast.GeneratorExp)
+
+
+@rule("host-sync")
+def check_host_sync(tree: Tree) -> List[Finding]:
+    out: List[Finding] = []
+    for p in tree.files():
+        rp = tree.rel(p)
+        if "/serving/" not in f"/{rp}" or not rp.startswith("src/"):
+            continue
+        mod = tree.parse(rp)
+        if mod is None:
+            continue
+        scopes = qualified_scopes(mod)
+        for node in ast.walk(mod):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            msg = ""
+            if name in _SYNC_CALLS:
+                msg = (f"host-device sync point: {name}() blocks the "
+                       f"scheduler on the device — allowlist with a "
+                       f"justification or move off the critical path")
+            elif name in _NP_COERCE and node.args \
+                    and not isinstance(node.args[0], _HOST_LITERAL):
+                msg = (f"{name}() on a non-literal operand copies a device "
+                       f"array to host (an implicit sync) — use host data "
+                       f"or allowlist with a justification")
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item" and not node.args:
+                msg = (".item() pulls a device scalar to host (an implicit "
+                       "sync) — batch the readback or allowlist it")
+            if msg:
+                out.append(Finding("host-sync", rp, node.lineno, msg,
+                                   scope=scopes.get(node, "")))
+    return out
+
+
+# -- allocator-encapsulation -------------------------------------------------
+
+#: BlockManager state only kv_cache.py may mutate (DESIGN §9/§10/§11)
+_PROTECTED = {"tables", "swapped_tables", "ref", "_free", "_swap_free",
+              "_cached", "_index", "_hash_of", "_commit", "_released"}
+
+#: container methods that mutate their receiver
+_MUTATORS = {"append", "extend", "insert", "pop", "remove", "clear",
+             "setdefault", "update", "popitem"}
+
+
+def _protected_target(node: ast.AST) -> str:
+    """The protected attribute a store/del target reaches, or ''."""
+    if isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, ast.Attribute) and node.attr in _PROTECTED:
+        return node.attr
+    return ""
+
+
+@rule("allocator-encapsulation")
+def check_allocator_encapsulation(tree: Tree) -> List[Finding]:
+    out: List[Finding] = []
+    for p in tree.files():
+        rp = tree.rel(p)
+        if rp == tree.kv_cache:
+            continue
+        mod = tree.parse(rp)
+        if mod is None:
+            continue
+        scopes = qualified_scopes(mod)
+
+        def flag(node, attr, how):
+            out.append(Finding(
+                "allocator-encapsulation", rp, node.lineno,
+                f"mutation of BlockManager.{attr} ({how}) outside "
+                f"kv_cache.py — allocator state changes only through "
+                f"BlockManager methods (the PR 2 drift-family guard)",
+                scope=scopes.get(node, "")))
+
+        for node in ast.walk(mod):
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in targets:
+                    attr = _protected_target(t)
+                    if attr:
+                        flag(node, attr, "assignment")
+            elif isinstance(node, ast.Delete):
+                for t in node.targets:
+                    attr = _protected_target(t)
+                    if attr:
+                        flag(node, attr, "del")
+            elif isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _MUTATORS:
+                chain = attr_chain(node.func)
+                hit = next((a for a in chain[1:] if a in _PROTECTED), "")
+                if hit:
+                    flag(node, hit, f".{node.func.attr}()")
+    return out

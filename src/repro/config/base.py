@@ -247,7 +247,6 @@ class ServeConfig:
     prefix_cache: bool = False
     kv_pool_tokens: int = 0        # η; 0 => derived from memory budget
     hbm_budget_bytes: int = 0      # M_max source; 0 => engine-provided
-    scheduling_interval: int = 1   # controller cadence (decode steps)
     l0_refresh_interval: int = 32  # L0 offline refresh cadence (intervals)
     chunked_prefill: bool = False  # PD-fusion mode
     chunk_budget_tokens: int = 512 # base token budget per fused step

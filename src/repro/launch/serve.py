@@ -21,6 +21,19 @@ from repro.launch.mesh import ensure_cpu_devices
 from repro.serving.cost_model import PROFILES
 
 
+def parse_buckets(spec: str):
+    """"1,2,4" -> (1, 2, 4): compiled decode batch bucket sizes."""
+    try:
+        shape = tuple(int(p) for p in spec.split(",") if p)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"--batch-buckets wants comma-separated ints, got {spec!r}")
+    if any(s < 1 for s in shape):
+        raise argparse.ArgumentTypeError(
+            f"--batch-buckets sizes must be >= 1, got {spec!r}")
+    return shape
+
+
 def parse_mesh(spec: str):
     """"2,2" / "2x2" -> (2, 2); last axis is "model" (DESIGN §12)."""
     parts = [p for p in spec.replace("x", ",").split(",") if p]
@@ -39,6 +52,28 @@ def main():
                     choices=["static", "memory", "sla", "combined"])
     ap.add_argument("--sla-ms", type=float, default=0.0)
     ap.add_argument("--b-max", type=int, default=16)
+    ap.add_argument("--b-min", type=int, default=1,
+                    help="Alg 1 lower batch bound B_min")
+    # controller tolerance bands + Alg 2 window control (paper §III)
+    ap.add_argument("--eps-d", type=float, default=2.0, metavar="MS",
+                    help="SLA latency tolerance band eps_D (ms)")
+    ap.add_argument("--eps-m", type=float, default=0.05,
+                    help="memory-overflow probability budget eps_M")
+    ap.add_argument("--alpha", type=int, default=16,
+                    help="Alg 2 window-width control alpha")
+    ap.add_argument("--delta", type=int, default=4,
+                    help="Alg 2 anti-noise relaxation delta")
+    ap.add_argument("--l0-refresh", type=int, default=32, metavar="N",
+                    help="L0 offline refresh cadence in controller intervals")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV allocator block granularity (tokens)")
+    ap.add_argument("--hbm-budget", type=int, default=0, metavar="BYTES",
+                    help="M_max HBM budget override; 0 derives it from "
+                         "the hardware profile")
+    ap.add_argument("--batch-buckets", type=parse_buckets, default=None,
+                    metavar="B1,B2,...",
+                    help="compiled decode batch shapes, e.g. '1,2,4,8'; "
+                         "default: powers of two up to --b-max")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--pool-tokens", type=int, default=4096)
@@ -111,8 +146,18 @@ def main():
     model = build_model(cfg, dtype=jnp.float32 if args.variant == "reduced"
                         else jnp.bfloat16)
     params = model.init(jax.random.PRNGKey(args.seed))
-    serve = ServeConfig(policy=args.policy, b_max=args.b_max,
-                        d_sla_ms=args.sla_ms, max_new_tokens=args.max_new,
+    buckets = args.batch_buckets or \
+        tuple(2 ** i for i in range(0, args.b_max.bit_length()))
+    serve = ServeConfig(policy=args.policy,
+                        b_min=args.b_min, b_max=args.b_max,
+                        d_sla_ms=args.sla_ms,
+                        eps_d_ms=args.eps_d, eps_m=args.eps_m,
+                        alpha=args.alpha, delta=args.delta,
+                        block_size=args.block_size,
+                        hbm_budget_bytes=args.hbm_budget,
+                        l0_refresh_interval=args.l0_refresh,
+                        max_new_tokens=args.max_new,
+                        batch_buckets=buckets,
                         kv_pool_tokens=args.pool_tokens,
                         chunked_prefill=args.chunked,
                         chunk_budget_tokens=args.chunk_budget,
@@ -125,7 +170,7 @@ def main():
                         mesh_shape=args.mesh or ())
     enc_len = 16 if default_enc_len(cfg) else 0
     eng = Engine(model, params, serve, max_context=args.max_context,
-                 buckets=tuple(2 ** i for i in range(0, args.b_max.bit_length())),
+                 buckets=buckets,
                  prefill_chunk=16, enc_len=enc_len,
                  cost=CostModel(cfg, PROFILES[args.profile]))
 

@@ -247,6 +247,12 @@ class Engine:
         self.decode_steps = 0
         self.batch_trace: List[int] = []
         self.tbt_trace: List[float] = []
+        # per-request TTFT (queue wait + prefill service), for the p90/mean
+        # twins of SimResult (DESIGN §7 differential harness)
+        self.ttft_trace: List[float] = []
+        # SLA attainment, sim-mirrored: decode steps within d_sla + eps_d
+        self._sla_ok = 0
+        self._sla_steps = 0
         # per-interval packed prefill tokens (packer audit: sum of lane
         # chunks each fused interval; each entry <= that interval's budget)
         self.prefill_tokens_trace: List[int] = []
@@ -769,6 +775,7 @@ class Engine:
             self.tel.on_first_token(
                 r.prefill_start_time - r.arrival_time,
                 r.first_token_time - r.prefill_start_time)
+            self.ttft_trace.append(r.first_token_time - r.arrival_time)
             r.output_tokens.append(int(jnp.argmax(last_logits[j][take - 1])))
             self.active.append(r)
         return dt_ms
@@ -832,6 +839,7 @@ class Engine:
             self.cache = cache_put(self.cache, sub, slot)
         r.state = RequestState.RUNNING
         r.first_token_time = self._now()
+        self.ttft_trace.append(r.first_token_time - r.arrival_time)
         r.output_tokens.append(int(jnp.argmax(last_logits)))
         self.active.append(r)
 
@@ -1007,6 +1015,10 @@ class Engine:
         self.batch_trace.append(n)
         self.decode_steps += 1
         self.total_decoded += n
+        self._sla_steps += 1
+        if self.serve.d_sla_ms <= 0 or dt_ms <= self.serve.d_sla_ms \
+                + self.serve.eps_d_ms:
+            self._sla_ok += 1
 
         finished = []
         grow_failed = []
@@ -1056,8 +1068,12 @@ class Engine:
         occ = self.tel.lane_occ
         tq, _ = self.tel.ttft_queue.get()
         tp, _ = self.tel.ttft_prefill.get()
+        tbts = sorted(self.tbt_trace)
+        ttfts = sorted(self.ttft_trace)
         return {
             "throughput_tok_s": self.total_decoded / max(el, 1e-9),
+            "total_tokens": float(self.total_decoded),
+            "duration_s": el,
             # mesh-sharded serving (DESIGN §12): effective model-axis
             # shards of the KV pool and the resulting token capacity
             "model_shards": float(self.model_shards),
@@ -1067,6 +1083,9 @@ class Engine:
             if self.batch_trace else 0.0,
             "tbt_ms_mean": (sum(self.tbt_trace) / len(self.tbt_trace))
             if self.tbt_trace else 0.0,
+            "tbt_ms_p95": tbts[int(0.95 * (len(tbts) - 1))] if tbts else 0.0,
+            "sla_attainment": (self._sla_ok / self._sla_steps)
+            if self._sla_steps else 0.0,
             "finished": self.total_finished,
             "admitted": self.admitted_total,
             "preemptions": self.preemptions,
@@ -1087,6 +1106,7 @@ class Engine:
             # prefix sharing (DESIGN §10)
             "prefix_hit_rate": self.blocks.prefix_hit_rate,
             "prefix_hit_tokens": float(self.blocks.prefix_hit_tokens),
+            "prefix_query_tokens": float(self.blocks.prefix_query_tokens),
             "cached_blocks": float(self.blocks.cached_blocks),
             "cache_evictions": float(self.blocks.cache_evictions),
             "logical_used_tokens": float(self.blocks.logical_used_tokens),
@@ -1100,4 +1120,7 @@ class Engine:
             "prefill_tokens": float(self.tel.prefill_tokens_total),
             "ttft_queue_s_mean": tq,
             "ttft_prefill_s_mean": tp,
+            "ttft_mean_s": (sum(ttfts) / len(ttfts)) if ttfts else 0.0,
+            "ttft_p90_s": ttfts[int(0.9 * (len(ttfts) - 1))]
+            if ttfts else 0.0,
         }

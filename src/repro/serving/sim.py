@@ -93,16 +93,27 @@ class SimResult:
     ttft_p90_s: float = 0.0         # time-to-first-token (queueing + prefill)
     ttft_mean_s: float = 0.0
     # TTFT attribution (DESIGN §6): queue wait vs prefill service means
-    ttft_queue_mean_s: float = 0.0
-    ttft_prefill_mean_s: float = 0.0
+    # (engine-summary key names — the differential harness compares by name)
+    ttft_queue_s_mean: float = 0.0
+    ttft_prefill_s_mean: float = 0.0
     prefill_lane_occupancy: float = 0.0  # mean busy-lane fraction, fused steps
+    prefill_tokens: float = 0.0     # total prefill tokens packed (DESIGN §6)
     sla_attainment: float = 0.0     # fraction of decode steps within SLA
     mean_batch: float = 0.0
+    decode_steps: int = 0
+    # mesh-sharded pool (DESIGN §12) + end-of-run pool occupancy (§9/§10)
+    model_shards: float = 1.0
+    pool_tokens: float = 0.0
+    cached_blocks: float = 0.0
+    logical_used_tokens: float = 0.0
+    physical_used_tokens: float = 0.0
+    logical_used_bytes: float = 0.0
+    physical_used_bytes: float = 0.0
     batch_trace: List[int] = dataclasses.field(default_factory=list)
     decisions: List[BatchDecision] = dataclasses.field(default_factory=list)
 
     @property
-    def throughput(self) -> float:
+    def throughput_tok_s(self) -> float:
         return self.total_tokens / max(self.duration_s, 1e-9)
 
 
@@ -453,6 +464,7 @@ class ServingSimulator:
         if b:
             self.tel.on_decode_step(tbt_ms, b)
             self._tbts.append(tbt_ms)
+            self.res.decode_steps += 1
             self._sla_steps += 1
             if self.serve.d_sla_ms <= 0 or tbt_ms <= self.serve.d_sla_ms \
                     + self.serve.eps_d_ms:
@@ -539,10 +551,10 @@ class ServingSimulator:
         served = [r for r in self._all
                   if r.first_token_time >= 0 and r.prefill_start_time >= 0]
         if served:
-            self.res.ttft_queue_mean_s = sum(
+            self.res.ttft_queue_s_mean = sum(
                 r.prefill_start_time - r.arrival_time for r in served) \
                 / len(served)
-            self.res.ttft_prefill_mean_s = sum(
+            self.res.ttft_prefill_s_mean = sum(
                 r.first_token_time - r.prefill_start_time for r in served) \
                 / len(served)
         if self.tel.lane_occ:
@@ -564,4 +576,16 @@ class ServingSimulator:
         if self._swap_waits:
             self.res.swap_latency_s_mean = \
                 sum(self._swap_waits) / len(self._swap_waits)
+        # engine-summary twins (counter-parity): shard/pool geometry,
+        # prefill volume and end-of-run pool occupancy
+        self.res.model_shards = float(self.model_shards)
+        self.res.pool_tokens = float(self.mem.eta)
+        self.res.prefill_tokens = float(self.tel.prefill_tokens_total)
+        self.res.cached_blocks = float(self.blocks.cached_blocks)
+        self.res.logical_used_tokens = float(self.blocks.logical_used_tokens)
+        self.res.physical_used_tokens = float(self.blocks.physical_used_tokens)
+        self.res.logical_used_bytes = float(self.mem.tokens_to_bytes(
+            self.blocks.logical_used_tokens))
+        self.res.physical_used_bytes = float(self.mem.tokens_to_bytes(
+            self.blocks.physical_used_tokens))
         return self.res

@@ -1,0 +1,27 @@
+"""Bad fixture: one seeded violation per AST rule, at known lines."""
+import jax
+import numpy as np
+
+
+class Engine:
+    def __init__(self, blocks):
+        self.blocks = blocks
+        self.finished = 0
+        self.preemptions = 0
+
+    def step(self, x):
+        y = jax.block_until_ready(x)          # host-sync: line 13
+        n = int(y.item())                     # host-sync: line 14
+        h = np.asarray(y)                     # host-sync: line 15
+        return n, h
+
+    def evict(self, rid, b):
+        self.blocks.ref[b] -= 1               # allocator: line 19
+        self.blocks.tables[rid].append(b)     # allocator: line 20
+        del self.blocks.tables[rid]           # allocator: line 21
+
+    def summary(self):
+        return {
+            "finished": self.finished,
+            "preemptions": self.preemptions,  # counter-parity: line 26
+        }

@@ -1,0 +1,221 @@
+"""Flight-rules static analysis (DESIGN §13): rule-by-rule coverage over
+paired good/bad fixture trees (exact rule IDs, messages and file:line
+anchors), allowlist hygiene (justification / staleness / count drift),
+seeded-violation detection against copies of the REAL anchor files, and
+the tier-1 gate that runs the full suite over the live tree.
+"""
+import shutil
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import ALLOWLIST, Allow, Tree, run
+from repro.analysis.framework import MIN_REASON, apply_allowlist
+
+REPO = Path(__file__).resolve().parents[1]
+FIX = REPO / "tests" / "fixtures" / "analysis"
+
+ENGINE = "src/repro/serving/engine.py"
+SIM = "src/repro/serving/sim.py"
+CONFIG = "src/repro/config/base.py"
+
+OK_REASON = "fixture sync point retained deliberately for this test"
+
+
+def bad_report(**kw):
+    return run(Tree(root=FIX / "bad"), **kw)
+
+
+# -- per-rule fixture coverage: exact IDs, messages, anchors -----------------
+
+def test_host_sync_bad_fixture_exact_anchors():
+    r = bad_report(rule_ids=["host-sync"])
+    got = {(f.path, f.line, f.scope) for f in r.findings}
+    assert got == {(ENGINE, 13, "Engine.step"),
+                   (ENGINE, 14, "Engine.step"),
+                   (ENGINE, 15, "Engine.step")}
+    by_line = {f.line: f.message for f in r.findings}
+    assert "jax.block_until_ready" in by_line[13]
+    assert ".item() pulls a device scalar" in by_line[14]
+    assert "np.asarray" in by_line[15]
+    assert all(f.rule == "host-sync" for f in r.findings)
+    assert r.findings[0].anchor == f"{ENGINE}:13"
+
+
+def test_allocator_encapsulation_bad_fixture_exact_anchors():
+    r = bad_report(rule_ids=["allocator-encapsulation"])
+    got = {(f.line, f.scope) for f in r.findings}
+    assert got == {(19, "Engine.evict"), (20, "Engine.evict"),
+                   (21, "Engine.evict")}
+    msgs = {f.line: f.message for f in r.findings}
+    assert "BlockManager.ref (assignment)" in msgs[19]
+    assert "BlockManager.tables (.append())" in msgs[20]
+    assert "BlockManager.tables (del)" in msgs[21]
+    assert all(f.path == ENGINE for f in r.findings)
+
+
+def test_counter_parity_bad_fixture_exact_anchors():
+    r = bad_report(rule_ids=["counter-parity"])
+    eng = [f for f in r.findings if f.path == ENGINE]
+    sim = [f for f in r.findings if f.path == SIM]
+    assert [(f.line, f.scope) for f in eng] == [(26, "Engine.summary")]
+    assert "'preemptions' has no SimResult twin" in eng[0].message
+    # oom_events (field) and throughput (@property) both lack summary keys;
+    # batch_trace is a List and structurally exempt
+    assert {(f.line, f.scope) for f in sim} == \
+        {(9, "SimResult"), (13, "SimResult")}
+    assert any("'oom_events'" in f.message for f in sim)
+    assert any("'throughput'" in f.message for f in sim)
+
+
+def test_config_wiring_bad_fixture_exact_anchors():
+    r = bad_report(rule_ids=["config-wiring"])
+    msgs = {(f.line, f.message) for f in r.findings}
+    assert all(f.path == CONFIG for f in r.findings)
+    assert {line for line, _ in msgs} == {8, 9, 10}
+    assert any("dead ServeConfig field 'scheduling_interval'" in m
+               for _, m in msgs)
+    assert any("'b_min' is not wired through the serving CLI" in m
+               for _, m in msgs)
+    assert any("'eps_m' is undocumented" in m for _, m in msgs)
+
+
+def test_good_fixture_clean_under_justified_allowlist():
+    allows = [Allow("host-sync", ENGINE, "Engine.warmup", 1, OK_REASON)]
+    r = run(Tree(root=FIX / "good"), allows=allows)
+    assert r.ok, (r.findings, r.problems)
+    # and without the allowlist the sync point surfaces
+    r2 = run(Tree(root=FIX / "good"))
+    assert [(f.rule, f.scope) for f in r2.findings] == \
+        [("host-sync", "Engine.warmup")]
+
+
+# -- allowlist hygiene -------------------------------------------------------
+
+def test_allowlist_requires_justification():
+    allows = [Allow("host-sync", ENGINE, "Engine.warmup", 1, "perf")]
+    r = run(Tree(root=FIX / "good"), allows=allows)
+    assert not r.ok
+    assert len(r.problems) == 1
+    assert "unjustified allowlist entry" in r.problems[0].message
+    assert str(MIN_REASON) in r.problems[0].message
+    # the finding is NOT suppressed by an unjustified entry
+    assert [f.rule for f in r.findings] == ["host-sync"]
+
+
+def test_allowlist_stale_entry_fails():
+    allows = [Allow("host-sync", ENGINE, "Engine.warmup", 1, OK_REASON),
+              Allow("host-sync", ENGINE, "Engine.gone", 2, OK_REASON)]
+    r = run(Tree(root=FIX / "good"), allows=allows)
+    assert not r.ok and not r.findings
+    assert len(r.problems) == 1
+    assert "stale allowlist entry" in r.problems[0].message
+
+
+def test_allowlist_count_drift_fails():
+    allows = [Allow("host-sync", ENGINE, "Engine.step", 2, OK_REASON)]
+    r = run(Tree(root=FIX / "bad"), rule_ids=["host-sync"], allows=allows)
+    assert not r.ok
+    assert any("count drift" in p.message and "2 finding(s) but 3 match"
+               in p.message for p in r.problems)
+
+
+# -- seeded violations against the REAL anchor files -------------------------
+
+@pytest.fixture()
+def seeded(tmp_path):
+    """Copy the real anchor files into a scratch tree ready for seeding.
+    Relative paths match the repo, so the production ALLOWLIST applies."""
+    for rel in [ENGINE, SIM, "src/repro/serving/kv_cache.py",
+                CONFIG, "src/repro/launch/serve.py", "README.md"]:
+        dst = tmp_path / rel
+        dst.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copy(REPO / rel, dst)
+    shutil.copytree(REPO / "docs", tmp_path / "docs")
+    return tmp_path
+
+
+def seed(root, rel, old="", new="", append=""):
+    p = root / rel
+    text = p.read_text()
+    if old:
+        assert old in text, f"seed anchor {old!r} missing from {rel}"
+        text = text.replace(old, new)
+    p.write_text(text + append)
+
+
+def test_seeded_unallowlisted_block_until_ready_caught(seeded):
+    seed(seeded, ENGINE, append=(
+        "\n\ndef _sneaky_sync(x):\n"
+        "    return jax.block_until_ready(x)\n"))
+    r = run(Tree(root=seeded), allows=ALLOWLIST)
+    assert not r.ok
+    assert any(f.rule == "host-sync" and f.scope == "_sneaky_sync"
+               for f in r.findings)
+
+
+def test_seeded_blockmanager_mutation_caught(seeded):
+    seed(seeded, ENGINE, append=(
+        "\n\ndef _drift(blocks, b):\n"
+        "    blocks.ref[b] -= 1\n"))
+    r = run(Tree(root=seeded), allows=ALLOWLIST)
+    assert not r.ok
+    assert any(f.rule == "allocator-encapsulation"
+               and "BlockManager.ref" in f.message
+               and f.scope == "_drift" for f in r.findings)
+
+
+def test_seeded_summary_only_counter_caught(seeded):
+    seed(seeded, ENGINE,
+         old='"finished": self.total_finished,',
+         new='"finished": self.total_finished,\n'
+             '            "phantom_counter": 0.0,')
+    r = run(Tree(root=seeded), allows=ALLOWLIST)
+    assert not r.ok
+    assert any(f.rule == "counter-parity" and "'phantom_counter'"
+               in f.message for f in r.findings)
+
+
+def test_seeded_unwired_serveconfig_field_caught(seeded):
+    seed(seeded, CONFIG,
+         old="    b_max: int = 256",
+         new="    b_max: int = 256\n    phantom_knob: int = 0")
+    # read somewhere under src/ so only the CLI wiring is missing
+    seed(seeded, ENGINE, append=(
+        "\n\ndef _read_phantom(serve):\n"
+        "    return serve.phantom_knob\n"))
+    r = run(Tree(root=seeded), allows=ALLOWLIST)
+    assert not r.ok
+    assert any(f.rule == "config-wiring"
+               and "'phantom_knob' is not wired" in f.message
+               for f in r.findings)
+
+
+def test_seeded_dead_serveconfig_field_caught(seeded):
+    seed(seeded, CONFIG,
+         old="    b_max: int = 256",
+         new="    b_max: int = 256\n    phantom_dead: int = 0")
+    r = run(Tree(root=seeded), allows=ALLOWLIST)
+    assert any(f.rule == "config-wiring"
+               and "dead ServeConfig field 'phantom_dead'" in f.message
+               for f in r.findings)
+
+
+# -- the tier-1 gate: the live tree must be clean ----------------------------
+
+def test_live_tree_clean():
+    r = run(Tree(root=REPO), allows=ALLOWLIST)
+    assert r.ok, "\n".join(str(f) for f in r.findings + r.problems)
+    # the allowlist is fully consumed: every entry matched (no problems)
+    # and the engine's sync points stayed within their declared counts
+    assert r.per_rule["host-sync"] == sum(
+        a.count for a in ALLOWLIST if a.rule == "host-sync")
+
+
+def test_report_json_round_trip():
+    import json
+    r = run(Tree(root=FIX / "bad"), rule_ids=["host-sync"])
+    data = json.loads(r.to_json())
+    assert data["ok"] is False
+    assert data["per_rule"] == {"host-sync": 3}
+    assert data["findings"][0]["path"] == ENGINE

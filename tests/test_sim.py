@@ -65,7 +65,7 @@ def test_dynamic_beats_static_throughput():
     st = run_sim("static", 256)
     dy = run_sim("memory", 4096)
     assert st.finished == dy.finished == 400
-    assert dy.throughput > st.throughput * 1.05
+    assert dy.throughput_tok_s > st.throughput_tok_s * 1.05
 
 
 def test_all_requests_complete_under_all_policies():
@@ -91,7 +91,7 @@ def test_combined_never_exceeds_memory_bound():
 def test_chunked_prefill_mode_completes():
     res = run_sim("memory", 512, n=200, chunked=True)
     assert res.finished == 200
-    assert res.throughput > 0
+    assert res.throughput_tok_s > 0
 
 
 def test_poisson_arrivals_idle_advance():

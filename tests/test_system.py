@@ -29,7 +29,7 @@ def test_paper_claim_throughput_gain_simulated():
 
     static = run("static", 256)
     dynamic = run("memory", 4096)
-    gain = dynamic.throughput / static.throughput - 1
+    gain = dynamic.throughput_tok_s / static.throughput_tok_s - 1
     assert gain > 0.05
     assert static.finished == dynamic.finished == 600
 
