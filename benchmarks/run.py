@@ -10,7 +10,7 @@ def csv_out(name: str, us_per_call: float, derived: str) -> None:
 
 
 BENCHES = ("fig3", "table1", "table2", "fig4", "ablation", "burst",
-           "prefix", "swap", "tp", "roofline")
+           "prefix", "swap", "tp", "async", "roofline")
 
 
 def main() -> None:
@@ -40,6 +40,8 @@ def main() -> None:
                 from benchmarks.kv_swap import run
             elif name == "tp":
                 from benchmarks.tp_serving import run
+            elif name == "async":
+                from benchmarks.async_overlap import run
             else:
                 from benchmarks.roofline import run
             run(csv_out)

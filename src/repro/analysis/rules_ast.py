@@ -81,7 +81,8 @@ def check_host_sync(tree: Tree) -> List[Finding]:
 
 #: BlockManager state only kv_cache.py may mutate (DESIGN §9/§10/§11)
 _PROTECTED = {"tables", "swapped_tables", "ref", "_free", "_swap_free",
-              "_cached", "_index", "_hash_of", "_commit", "_released"}
+              "_cached", "_index", "_hash_of", "_commit", "_released",
+              "_deferred", "_epoch_open", "_shadow_snap"}
 
 #: container methods that mutate their receiver
 _MUTATORS = {"append", "extend", "insert", "pop", "remove", "clear",

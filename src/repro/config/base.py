@@ -273,6 +273,14 @@ class ServeConfig:
     # crossover per victim, "swap" forces swap-out whenever it is possible
     # at all (host space, no shared blocks — else recompute fallback)
     preempt: str = "auto"
+    # async dispatch-ahead pipeline (DESIGN §14): how many device steps may
+    # be in flight while the host schedules the next interval. 0 keeps the
+    # fully synchronous loop (dispatch + retire inside one interval); 1
+    # overlaps interval N+1's admission/lane-packing/table edits with
+    # interval N's device step, reading telemetry one interval late (Alg 1
+    # tolerates stale snapshots by design). Outputs are bitwise-identical
+    # at every depth — only wall-clock attribution changes.
+    overlap_depth: int = 0
     # mesh-sharded serving (DESIGN §12): device mesh shape for the engine,
     # last axis = "model" (tensor parallelism over kv-heads / head_dim),
     # leading axes = ("data",) or ("pod", "data"). () keeps today's

@@ -110,6 +110,12 @@ def main():
                     choices=sorted(PROFILES),
                     help="hardware profile the 'auto' crossover prices "
                          "PCIe vs re-prefill against (DESIGN §11)")
+    # async dispatch-ahead pipeline (DESIGN §14)
+    ap.add_argument("--overlap-depth", type=int, default=0,
+                    help="device steps left in flight while the host "
+                         "schedules the next interval: 0 = synchronous "
+                         "loop, 1 = dispatch-ahead overlap (DESIGN §14); "
+                         "outputs are bitwise-identical at every depth")
     # mesh-sharded serving (DESIGN §12)
     ap.add_argument("--mesh", type=parse_mesh, default=None,
                     metavar="DATA,MODEL",
@@ -167,6 +173,7 @@ def main():
                         prefix_cache=args.prefix_cache,
                         swap_space_blocks=args.swap_space,
                         preempt=args.preempt,
+                        overlap_depth=args.overlap_depth,
                         mesh_shape=args.mesh or ())
     enc_len = 16 if default_enc_len(cfg) else 0
     eng = Engine(model, params, serve, max_context=args.max_context,

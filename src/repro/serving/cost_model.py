@@ -26,6 +26,11 @@ class HardwareProfile:
     hbm_bw_per_chip: float         # B/s
     hbm_per_chip: float            # bytes
     step_overhead_ms: float = 15.0  # scheduler + launch + sampling
+    # host-side share of step_overhead_ms (DESIGN §14): admission, lane
+    # packing, block-table edits, sampling readback — the portion the async
+    # dispatch-ahead loop can overlap with the in-flight device step. The
+    # remainder of tau_step is device time. Must be <= step_overhead_ms.
+    host_overhead_ms: float = 0.0
     parallel_eff: float = 0.85     # TP scaling efficiency
     # host<->device interconnect per chip (PCIe gen4 x16-class), the KV
     # swap path's bandwidth (DESIGN §11)
@@ -34,16 +39,17 @@ class HardwareProfile:
 
 PROFILES = {
     "a100x8": HardwareProfile("a100x8", 8, 312e12, 2.039e12, 80e9,
-                              step_overhead_ms=20.0),
+                              step_overhead_ms=20.0, host_overhead_ms=8.0),
     "h800x8": HardwareProfile("h800x8", 8, 989e12, 3.35e12, 80e9,
-                              step_overhead_ms=15.0),
+                              step_overhead_ms=15.0, host_overhead_ms=6.0),
     "v5e-16": HardwareProfile("v5e-16", 16, 197e12, 819e9, 16e9,
-                              step_overhead_ms=5.0),
+                              step_overhead_ms=5.0, host_overhead_ms=2.0),
     "v5e-256": HardwareProfile("v5e-256", 256, 197e12, 819e9, 16e9,
-                               step_overhead_ms=5.0),
+                               step_overhead_ms=5.0, host_overhead_ms=2.0),
     # calibrated to the paper's Fig 3 anchors (LLaMA3-70B deployment)
     "paper-fig3": HardwareProfile("paper-fig3", 8, 120e12, 1.1e12, 64e9,
-                                  step_overhead_ms=28.0, parallel_eff=0.8),
+                                  step_overhead_ms=28.0,
+                                  host_overhead_ms=10.0, parallel_eff=0.8),
 }
 
 
@@ -123,6 +129,17 @@ class CostModel:
         t += decode_batch * self.decode_row_s(mean_ctx)
         t += self.prefill_tokens_s(prefill_tokens, prefill_ctx or mean_ctx)
         return t
+
+    def split_host_device(self, tau_s: float) -> "tuple[float, float]":
+        """Split one interval's tau_step into (host_s, device_s) — the
+        host-vs-device interval split (DESIGN §14). Host time is the
+        profile's host_overhead_ms share of the fixed step overhead
+        (clamped to the interval: a tiny calibrated tau can undercut it);
+        everything else — weight reads, KV reads, FLOPs — is device time.
+        host_s + device_s == tau_s always, so the sync-mode clock is
+        unchanged; the async sim advances by max(host, device) instead."""
+        host = min(self.hw.host_overhead_ms / 1e3, tau_s)
+        return host, tau_s - host
 
     def tau_step_ms(self, decode_batch: int, mean_ctx: float,
                     prefill_tokens: int = 0, prefill_ctx: float = 0.0) -> float:

@@ -17,6 +17,8 @@ the production template for TPU serving (launch/serve.py).
 """
 from __future__ import annotations
 
+import collections
+import dataclasses
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -83,6 +85,34 @@ def cache_clear_row(cache: Dict[str, Any], i: int) -> Dict[str, Any]:
 
 # per-slot state keys in paged mode: everything except the k/v/pos pools
 _POOL_KEYS = ("k", "v", "pos")
+
+
+@dataclasses.dataclass
+class _StepRec:
+    """One dispatched interval's retirement record (DESIGN §14).
+
+    Dispatch runs every value-independent decision — admission, lane
+    packing, grow/finish/preempt bookkeeping, block-table edits — and
+    parks the value-DEPENDENT residue here: the device futures to fence
+    on, the output-token placeholders to patch, and the telemetry feeds
+    that must not land before the step's results exist."""
+    #: device futures: "dec" sampled-token vector, "first" argmax scalars
+    #: (promotions / non-chunked prefills), "probe" the last dispatched
+    #: logits (fence anchor for prefill-only intervals)
+    payload: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: (request, output index, life generation, "d"|"f", payload row)
+    patches: List[Tuple[Request, int, int, str, int]] = \
+        dataclasses.field(default_factory=list)
+    #: (request, feed on_first_token, queue_s, prefill_start) TTFT stamps
+    firsts: List[Tuple[Request, bool, float, float]] = \
+        dataclasses.field(default_factory=list)
+    #: (request, output length) completion stamps, finish order preserved
+    completions: List[Tuple[Request, int]] = \
+        dataclasses.field(default_factory=list)
+    #: lane -> packed chunk tokens: the on_prefill_interval feed
+    lane_tokens: Optional[Dict[int, int]] = None
+    n_decode: int = 0
+    dispatched: bool = False
 
 
 def cache_gather(cache: Dict[str, Any], rows) -> Dict[str, Any]:
@@ -256,6 +286,22 @@ class Engine:
         # per-interval packed prefill tokens (packer audit: sum of lane
         # chunks each fused interval; each entry <= that interval's budget)
         self.prefill_tokens_trace: List[int] = []
+        # async dispatch-ahead pipeline (DESIGN §14): up to overlap_depth
+        # dispatched intervals stay un-fenced while the host schedules the
+        # next one against the live allocator + stale telemetry feeds;
+        # 0 = the synchronous loop (each interval retires in its own call)
+        self.overlap_depth = max(0, int(serve.overlap_depth))
+        self._inflight: "collections.deque[_StepRec]" = collections.deque()
+        # rid -> device scalar of the request's newest not-yet-retired
+        # token: the next decode step's input, spliced in without readback
+        self._pending_tok: Dict[int, Any] = {}
+        # rid -> life generation, bumped by _evict: retirement drops
+        # patches recorded against an earlier (cleared) life
+        self._gen: Dict[int, int] = {}
+        # host-vs-device interval split (DESIGN §14): per step() call,
+        # device_s = the retirement fence wait, host_s = the remainder
+        self.step_host_trace: List[float] = []
+        self.step_device_trace: List[float] = []
 
         self._decode_jit = self._mesh_call(jax.jit(self._decode_fn))
         self._prefill_jit = self._mesh_call(jax.jit(self._prefill_fn))
@@ -433,6 +479,9 @@ class Engine:
         Under prefix sharing this is a decref: registered blocks stay
         resident as evictable cache and keep their pos rows (DESIGN §10)."""
         freed = self.blocks.free(r.rid)
+        # the request's newest token no longer feeds a next decode step;
+        # pending patches read the retirement record's payload directly
+        self._pending_tok.pop(r.rid, None)
         if self.paged:
             self._release_blocks(freed)
             if r.slot >= 0:
@@ -510,10 +559,27 @@ class Engine:
 
     # -- scheduling interval -------------------------------------------------------
     def step(self) -> bool:
-        """One scheduling interval. Returns False when fully idle."""
+        """One scheduling interval. Returns False when fully idle.
+
+        Async dispatch-ahead pipeline (DESIGN §14): schedule interval N
+        against telemetry whose TBT/TTFT/throughput feeds are stale by up
+        to `overlap_depth` un-retired intervals (Alg 1 tolerates stale
+        snapshots — pool occupancy is always read live from the
+        allocator), dispatch N's prefill/decode graphs WITHOUT fencing,
+        then retire the oldest in-flight interval(s) until at most
+        `overlap_depth` device steps remain in flight. Depth 0 retires N
+        before returning — the synchronous loop, interval for interval.
+        """
         if not self.waiting and not self.active and not self.prefilling \
                 and not self.swapped:
+            # pipeline drain: retirement only patches token values,
+            # timestamps and telemetry — it never creates schedulable
+            # work — so the drained call still reports idle and run()'s
+            # step count matches the synchronous loop exactly
+            while self._inflight:
+                self._retire_step()
             return False
+        t0 = time.perf_counter()
         tel = self.tel.snapshot(
             now=self._now(),
             n_prefill=len(self.waiting) + len(self.prefilling),
@@ -532,6 +598,7 @@ class Engine:
         cap = bucketize(decision.max_batch, self.serve.batch_buckets) \
             if self.serve.batch_buckets else decision.max_batch
         cap = min(cap, decision.max_batch, self.max_slots)
+        rec = _StepRec()
 
         # swap-in drain (DESIGN §11): offloaded requests re-enter BEFORE
         # any new admission — they resume decode without re-prefill, and
@@ -587,7 +654,7 @@ class Engine:
                 r.prefill_pos = cached
                 self.prefilling.append(r)
             else:
-                self._prefill_request(r)
+                self._prefill_request(r, rec)
         self._drain_released()
 
         self._preempt_if_needed()
@@ -602,11 +669,25 @@ class Engine:
                 # spin no-op intervals forever — make minimum progress on
                 # one full chunk instead of livelocking
                 budget = self.prefill_chunk
-            chunk_ms = self._advance_prefill(budget)
+            self._advance_prefill(budget, rec)
             if self.active:
-                self._decode_once(extra_ms=chunk_ms)
+                self._decode_once(rec)
         elif self.active:
-            self._decode_once()
+            self._decode_once(rec)
+        if rec.dispatched:
+            self._inflight.append(rec)
+        # retire down to the pipeline depth: the fence wait is the
+        # interval's device time; everything else this call did is host
+        # work the in-flight step(s) just hid
+        device_s = 0.0
+        while len(self._inflight) > self.overlap_depth:
+            device_s += self._retire_step()
+        host_s = (time.perf_counter() - t0) - device_s
+        self.step_host_trace.append(host_s)
+        self.step_device_trace.append(device_s)
+        # fed live, not lagged: the split is produced by retirement
+        # itself, not by the interval being scheduled (DESIGN §14)
+        self.tel.on_interval(host_s, device_s)
         return True
 
     # -- PD fusion internals (DESIGN §6) ---------------------------------------
@@ -635,17 +716,19 @@ class Engine:
             r.slot = slot
             self.lanes[j] = r
 
-    def _advance_prefill(self, budget_tokens: int) -> float:
+    def _advance_prefill(self, budget_tokens: int, rec: _StepRec) -> None:
         """Advance up to n_prefill_lanes prefilling requests by one chunk
         each, within the interval's token budget (shared packer:
-        core.lanes.pack_chunks). Returns wall-clock ms."""
+        core.lanes.pack_chunks). Dispatch-only (DESIGN §14): no fence —
+        the chunk logits land in `rec` and promoted first tokens are
+        patched at retirement."""
         if not self.prefilling or budget_tokens <= 0:
-            return 0.0
+            return
         self._fill_lanes()
         plan = pack_chunks(self.serve.prefill_pack, self.lanes,
                            budget_tokens, self.prefill_chunk)
         if not plan:
-            return 0.0
+            return
         for _, r, _ in plan:
             if r.prefill_start_time < 0:
                 r.prefill_start_time = self._now()
@@ -670,13 +753,11 @@ class Engine:
                 continue
             groups.setdefault(t, []).append((j, r, t))
 
-        dt_ms = 0.0
         last_logits: Dict[int, Any] = {}   # lane -> logits of its chunk
         for j, r, take in single:
             piece = r.prompt_tokens[:take]
             tt = jnp.array([piece], jnp.int32)
             pos = jnp.array([list(range(take))], jnp.int32)
-            t0 = time.perf_counter()
             if self.paged:
                 logits, self.cache = self._prefill_paged_jit(
                     self.params, tt, pos, self._tables_for([r]),
@@ -686,10 +767,9 @@ class Engine:
                 sub = cache_take(self.cache, slot, 1)
                 logits, sub = self._prefill_jit(self.params, tt, pos, sub,
                                                 r.extras)
-            logits = jax.block_until_ready(logits)
-            dt_ms += (time.perf_counter() - t0) * 1e3
-            if not self.paged:
                 self.cache = cache_put(self.cache, sub, slot)
+            rec.dispatched = True
+            rec.payload["probe"] = logits
             last_logits[j] = logits[0]
         for take, entries in groups.items():
             if self.paged:
@@ -703,12 +783,11 @@ class Engine:
                 pos = jnp.array(
                     [list(range(r.prefill_pos, r.prefill_pos + take))
                      for r in reqs], jnp.int32)
-                t0 = time.perf_counter()
                 logits, self.cache = self._prefill_paged_jit(
                     self.params, tt, pos, self._tables_for(reqs), rows,
                     self.cache, None)
-                logits = jax.block_until_ready(logits)
-                dt_ms += (time.perf_counter() - t0) * 1e3
+                rec.dispatched = True
+                rec.payload["probe"] = logits
                 for i, (j, _, _) in enumerate(entries):
                     last_logits[j] = logits[i]
                 continue
@@ -723,12 +802,11 @@ class Engine:
                 pos = jnp.array([list(range(r.prefill_pos,
                                             r.prefill_pos + take))], jnp.int32)
                 sub = cache_take(self.cache, slot, 1)
-                t0 = time.perf_counter()
                 logits, sub = self._prefill_jit(self.params, tt, pos, sub,
                                                 None)
-                logits = jax.block_until_ready(logits)
-                dt_ms += (time.perf_counter() - t0) * 1e3
                 self.cache = cache_put(self.cache, sub, slot)
+                rec.dispatched = True
+                rec.payload["probe"] = logits
                 last_logits[j] = logits[0]
                 continue
             rows = jnp.array([self.max_slots + j for j, _, _ in entries],
@@ -739,15 +817,15 @@ class Engine:
             pos = jnp.array(
                 [list(range(r.prefill_pos, r.prefill_pos + take))
                  for _, r, _ in entries], jnp.int32)
-            t0 = time.perf_counter()
             logits, self.cache = self._prefill_lanes_jit(
                 self.params, tt, pos, self.cache, rows)
-            logits = jax.block_until_ready(logits)
-            dt_ms += (time.perf_counter() - t0) * 1e3
+            rec.dispatched = True
+            rec.payload["probe"] = logits
             for i, (j, _, _) in enumerate(entries):
                 last_logits[j] = logits[i]
 
-        self.tel.on_prefill_interval({j: t for j, _, t in plan}, self.n_lanes)
+        # deferred feed (DESIGN §14): lands when this interval retires
+        rec.lane_tokens = {j: t for j, _, t in plan}
         self.prefill_tokens_trace.append(sum(t for _, _, t in plan))
         for _, r, take in plan:
             r.prefill_pos += take
@@ -771,14 +849,21 @@ class Engine:
                 r.slot = dst
             r.lane = -1
             r.state = RequestState.RUNNING
-            r.first_token_time = self._now()
-            self.tel.on_first_token(
-                r.prefill_start_time - r.arrival_time,
-                r.first_token_time - r.prefill_start_time)
-            self.ttft_trace.append(r.first_token_time - r.arrival_time)
-            r.output_tokens.append(int(jnp.argmax(last_logits[j][take - 1])))
+            # first token: the argmax stays on device; the TTFT stamp and
+            # on_first_token feed land at retirement, when the token
+            # actually exists (DESIGN §14) — queue_s is captured now so an
+            # eviction between dispatch and retire can't corrupt the feed
+            tok = jnp.argmax(last_logits[j][take - 1])
+            flist = rec.payload.setdefault("first", [])
+            rec.patches.append((r, len(r.output_tokens),
+                                self._gen.get(r.rid, 0), "f", len(flist)))
+            flist.append(tok)
+            self._pending_tok[r.rid] = tok
+            rec.firsts.append((r, True,
+                               r.prefill_start_time - r.arrival_time,
+                               r.prefill_start_time))
+            r.output_tokens.append(None)
             self.active.append(r)
-        return dt_ms
 
     def run(self, max_steps: int = 100_000) -> int:
         steps = 0
@@ -787,7 +872,7 @@ class Engine:
         return steps
 
     # -- internals ---------------------------------------------------------------
-    def _prefill_request(self, r: Request):
+    def _prefill_request(self, r: Request, rec: _StepRec):
         # admission may have evicted cached blocks into this request's
         # table: their stale pos rows must be cleared before the first
         # attention read over the table (DESIGN §10)
@@ -838,9 +923,19 @@ class Engine:
                 last_logits = logits[0, len(piece) - 1]
             self.cache = cache_put(self.cache, sub, slot)
         r.state = RequestState.RUNNING
-        r.first_token_time = self._now()
-        self.ttft_trace.append(r.first_token_time - r.arrival_time)
-        r.output_tokens.append(int(jnp.argmax(last_logits)))
+        # first token deferred to retirement (DESIGN §14); the synchronous
+        # path never fed on_first_token here (no chunked service split),
+        # so only the TTFT stamp rides in rec.firsts
+        tok = jnp.argmax(last_logits)
+        flist = rec.payload.setdefault("first", [])
+        rec.patches.append((r, len(r.output_tokens),
+                            self._gen.get(r.rid, 0), "f", len(flist)))
+        flist.append(tok)
+        self._pending_tok[r.rid] = tok
+        rec.firsts.append((r, False, 0.0, 0.0))
+        r.output_tokens.append(None)
+        rec.dispatched = True
+        rec.payload["probe"] = last_logits
         self.active.append(r)
 
     def _preempt_if_needed(self):
@@ -950,6 +1045,9 @@ class Engine:
         contiguous mode compacts by moving the last row into the hole."""
         self._free_request(r)
         r.state = RequestState.WAITING
+        # new life generation (DESIGN §14): in-flight patches recorded
+        # against the cleared outputs must not land on the recompute pass
+        self._gen[r.rid] = self._gen.get(r.rid, 0) + 1
         r.output_tokens.clear()
         r.tbt_samples.clear()
         # the recompute pass re-probes the prefix index from scratch — the
@@ -971,7 +1069,7 @@ class Engine:
         self.waiting.insert(0, r)
         self.preemptions += 1
 
-    def _decode_once(self, extra_ms: float = 0.0):
+    def _decode_once(self, rec: _StepRec):
         if self.prefix:
             # COW guard on the position each decode writes (DESIGN §10)
             for r in self.active:
@@ -980,46 +1078,51 @@ class Engine:
         n = len(self.active)
         ge = [b for b in self.buckets if b >= n]
         bucket = min(ge) if ge else self.max_slots
-        toks = [r.output_tokens[-1] for r in self.active] + [0] * (bucket - n)
+        # inputs: retired tokens are host ints; un-retired ones (pipeline
+        # depth >= 1, or promoted this very interval) are still device
+        # scalars and are spliced in without a readback — the VALUES are
+        # identical to the synchronous loop's, so the decode graph sees
+        # the same inputs bit for bit (DESIGN §14)
+        toks: List[int] = []
+        pend: List[Tuple[int, Any]] = []
+        for i, r in enumerate(self.active):
+            v = r.output_tokens[-1]
+            if v is None:
+                toks.append(0)
+                pend.append((i, self._pending_tok[r.rid]))
+            else:
+                toks.append(v)
+        toks += [0] * (bucket - n)
         # the pending token sits at absolute position context_len - 1
         lens = [r.context_len - 1 for r in self.active] + [-1] * (bucket - n)
         tt = jnp.array(toks, jnp.int32)
+        for i, dv in pend:
+            tt = tt.at[i].set(dv)
         ll = jnp.array(lens, jnp.int32)
 
-        # host-side prep (tables build / row slicing) stays OUTSIDE the
-        # timed window in both modes so TBT compares the model step only
         if self.paged:
             rows = jnp.array([r.slot for r in self.active]
                              + [self.n_slots] * (bucket - n), jnp.int32)
             tables = self._tables_for(self.active, pad_to=bucket,
                                       kind="decode")
-            t0 = time.perf_counter()
-            logits, cache = self._decode_paged_jit(
+            logits, self.cache = self._decode_paged_jit(
                 self.params, tt, ll, tables, rows, self.cache)
-            logits = jax.block_until_ready(logits)
-            dt_ms = (time.perf_counter() - t0) * 1e3 + extra_ms
-            self.cache = cache
         else:
             sub = cache_take(self.cache, 0, bucket)
-            t0 = time.perf_counter()
             logits, sub = self._decode_jit(self.params, tt, ll, sub)
-            logits = jax.block_until_ready(logits)
-            dt_ms = (time.perf_counter() - t0) * 1e3 + extra_ms
             self.cache = cache_put(self.cache, sub, 0)
 
+        # the key split is host-side and dispatch-ordered, so sampling
+        # stays bit-identical to the synchronous loop at every depth
         self.key, sk = jax.random.split(self.key)
-        next_toks = [int(x) for x in sample(logits[:n], sk, self.temperature)]
-
-        self.tel.on_decode_step(dt_ms, n)
-        self.tbt_trace.append(dt_ms)
+        rec.payload["dec"] = sample(logits[:n], sk, self.temperature)
+        rec.n_decode = n
+        rec.dispatched = True
         self.batch_trace.append(n)
         self.decode_steps += 1
         self.total_decoded += n
-        self._sla_steps += 1
-        if self.serve.d_sla_ms <= 0 or dt_ms <= self.serve.d_sla_ms \
-                + self.serve.eps_d_ms:
-            self._sla_ok += 1
 
+        sampled = rec.payload["dec"]
         finished = []
         grow_failed = []
         for i, r in enumerate(self.active):
@@ -1030,8 +1133,14 @@ class Engine:
             grew = True
             if self.mem.bytes_per_token != 0:
                 grew = self.blocks.allocate(r.rid, r.context_len, 1)
-            r.output_tokens.append(next_toks[i])
-            r.tbt_samples.append(dt_ms)
+            # value-independent bookkeeping (DESIGN §14): the token's
+            # VALUE is still in flight, but its existence — length growth,
+            # finish at max_new_tokens/max_context — is not. Append a
+            # placeholder now, patch it at retirement.
+            rec.patches.append((r, len(r.output_tokens),
+                                self._gen.get(r.rid, 0), "d", i))
+            r.output_tokens.append(None)
+            self._pending_tok[r.rid] = sampled[i]
             if len(r.output_tokens) >= r.max_new_tokens \
                     or r.context_len >= self.max_context - 1:
                 finished.append(i)
@@ -1043,8 +1152,7 @@ class Engine:
         for i in sorted(finished, reverse=True):
             r = self.active[i]
             r.state = RequestState.FINISHED
-            r.finish_time = self._now()
-            self.tel.on_completion(len(r.output_tokens))
+            rec.completions.append((r, len(r.output_tokens)))
             self._free_request(r)
             if self.paged:
                 self.active.pop(i)
@@ -1061,6 +1169,61 @@ class Engine:
                 self._evict(self.active.index(r), r)
         # decode grows may have reclaimed cached blocks for reuse
         self._drain_released()
+
+    def _retire_step(self) -> float:
+        """Retire the oldest in-flight interval (DESIGN §14): fence on its
+        device futures — the timed wait IS the interval's device time,
+        the latency the host could not hide — then pull the sampled and
+        first tokens in ONE batched transfer, patch their output-token
+        placeholders, stamp TTFT/TBT at retirement (timestamps mark
+        result availability, not dispatch), apply the interval's deferred
+        telemetry feeds, and seal the allocator's shadow epoch. Returns
+        the fence wait in seconds."""
+        rec = self._inflight.popleft()
+        t0 = time.perf_counter()
+        # THE pipeline fence: the one block the async loop retains
+        jax.block_until_ready(rec.payload)
+        dev_s = time.perf_counter() - t0
+        # everything is ready — one bulk readback, not per-token syncs
+        vals = jax.device_get(rec.payload)
+        dt_ms = dev_s * 1e3
+        now = self._now()
+        dec = vals.get("dec")
+        first = vals.get("first", ())
+        for r, idx, gen, kind, k in rec.patches:
+            if self._gen.get(r.rid, 0) != gen:
+                continue   # evicted since dispatch: that life's outputs
+                           # were cleared; recompute re-emits them
+            if idx < len(r.output_tokens) and r.output_tokens[idx] is None:
+                r.output_tokens[idx] = int(dec[k] if kind == "d"
+                                           else first[k])
+            if kind == "d":
+                # TBT sample = the marginal fence wait this interval cost
+                r.tbt_samples.append(dt_ms)
+        if rec.lane_tokens is not None:
+            self.tel.on_prefill_interval(rec.lane_tokens, self.n_lanes)
+        for r, feed, queue_s, t_ps in rec.firsts:
+            r.first_token_time = now
+            self.ttft_trace.append(now - r.arrival_time)
+            if feed:
+                self.tel.on_first_token(queue_s, now - t_ps)
+        if rec.n_decode:
+            self.tel.on_decode_step(dt_ms, rec.n_decode)
+            self.tbt_trace.append(dt_ms)
+            self._sla_steps += 1
+            if self.serve.d_sla_ms <= 0 or dt_ms <= self.serve.d_sla_ms \
+                    + self.serve.eps_d_ms:
+                self._sla_ok += 1
+        for r, n_out in rec.completions:
+            r.finish_time = now
+            self.tel.on_completion(n_out)
+        # seal the shadow epoch: blocks freed since the last retirement
+        # are safe for arbitrary reuse now that the step that could still
+        # read them has been fenced; open the next epoch for the frees
+        # the remaining in-flight interval(s) will record
+        self.blocks.shadow_commit()
+        self.blocks.shadow_begin()
+        return dev_s
 
     # -- metrics ---------------------------------------------------------------
     def summary(self) -> Dict[str, float]:
@@ -1086,6 +1249,13 @@ class Engine:
             "tbt_ms_p95": tbts[int(0.95 * (len(tbts) - 1))] if tbts else 0.0,
             "sla_attainment": (self._sla_ok / self._sla_steps)
             if self._sla_steps else 0.0,
+            # host-vs-device interval split (DESIGN §14)
+            "step_host_s_mean": (sum(self.step_host_trace)
+                                 / len(self.step_host_trace))
+            if self.step_host_trace else 0.0,
+            "step_device_s_mean": (sum(self.step_device_trace)
+                                   / len(self.step_device_trace))
+            if self.step_device_trace else 0.0,
             "finished": self.total_finished,
             "admitted": self.admitted_total,
             "preemptions": self.preemptions,

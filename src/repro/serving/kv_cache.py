@@ -85,6 +85,18 @@ class BlockManager:
         # blocks evicted-for-reuse whose pos-pool rows the paged engine
         # must clear before their new tenant's first step (DESIGN §10)
         self._released: List[int] = []
+        # shadow-table epoch (DESIGN §14): while an epoch is open — i.e.
+        # while a dispatched device step is still in flight — blocks freed
+        # by scheduling edits are parked here instead of the free list, so
+        # the allocator hands them out only after every other free block
+        # (oldest-first), and `shadow_commit` at step retirement returns
+        # them to normal circulation. All pool-headroom queries count them
+        # as free, so admission/grow decisions are epoch-invariant: the
+        # epoch changes WHICH block ids are reused, never whether an
+        # allocation succeeds.
+        self._deferred: List[int] = []
+        self._epoch_open = False
+        self._shadow_snap = None
         self.prefix_hit_tokens = 0     # tokens served from shared blocks
         self.prefix_query_tokens = 0   # prompt tokens probed at admission
         self.cache_evictions = 0       # cached blocks reclaimed for reuse
@@ -93,11 +105,12 @@ class BlockManager:
     # -- queries ------------------------------------------------------------
     @property
     def free_blocks(self) -> int:
-        """Reclaimable blocks: truly free + evictable cached (ref == 0).
-        This is the controller's free signal — cached blocks are reclaimed
-        on demand by `allocate`, so admission/grow headroom must count them
-        (DESIGN §10)."""
-        return len(self._free) + len(self._cached)
+        """Reclaimable blocks: truly free + epoch-deferred + evictable
+        cached (ref == 0). This is the controller's free signal — cached
+        blocks are reclaimed on demand by `allocate` and deferred blocks
+        re-enter at `shadow_commit` or as a last resort, so admission/grow
+        headroom must count both (DESIGN §10/§14)."""
+        return len(self._free) + len(self._deferred) + len(self._cached)
 
     @property
     def free_tokens(self) -> int:
@@ -105,8 +118,9 @@ class BlockManager:
 
     @property
     def physical_free_blocks(self) -> int:
-        """Blocks holding no resident content at all."""
-        return len(self._free)
+        """Blocks holding no resident content at all (epoch-deferred
+        blocks are freed content-wise; they are merely reuse-parked)."""
+        return len(self._free) + len(self._deferred)
 
     @property
     def cached_blocks(self) -> int:
@@ -191,11 +205,17 @@ class BlockManager:
         return h.digest()
 
     def _pop_block(self) -> Optional[int]:
-        """Take a physical block: prefer the free list, else evict the
-        least-recently-used cached block (deregistering its content and
-        queueing it for a pos-row clear)."""
+        """Take a physical block: prefer the free list, then epoch-deferred
+        blocks (oldest first — the blocks a possibly in-flight step just
+        read are reused last, DESIGN §14), else evict the least-recently-
+        used cached block (deregistering its content and queueing it for a
+        pos-row clear). Deferred-before-cached keeps the eviction count
+        identical to the epoch-free synchronous loop, where deferred
+        blocks would simply sit on the free list."""
         if self._free:
             return self._free.pop()
+        if self._deferred:
+            return self._deferred.pop(0)
         if self._cached:
             b, _ = self._cached.popitem(last=False)   # LRU end
             h = self._hash_of.pop(b, None)
@@ -205,6 +225,75 @@ class BlockManager:
             self.cache_evictions += 1
             return b
         return None
+
+    def _push_free(self, b: int) -> None:
+        """Return a block to circulation: parked in the epoch's deferred
+        set while a shadow epoch is open (an in-flight device step may
+        still be reading it), straight to the free list otherwise."""
+        (self._deferred if self._epoch_open else self._free).append(b)
+
+    # -- shadow-table epochs (DESIGN §14) --------------------------------------
+    def shadow_begin(self) -> None:
+        """Open a shadow epoch covering one in-flight device step: blocks
+        freed until the matching `shadow_commit` are parked (reused only
+        after every other free block), and the full allocator state is
+        snapshotted so `shadow_rollback` can restore it. Headroom queries
+        (`free_blocks`, `admission_verdict`, `can_allocate`) count parked
+        blocks as free, so scheduling decisions match the synchronous loop
+        exactly — the epoch only biases WHICH ids are reused."""
+        if self._epoch_open:
+            raise RuntimeError("shadow epoch already open — commit or "
+                               "roll back the previous step first")
+        self._epoch_open = True
+        self._shadow_snap = dict(
+            free=list(self._free), deferred=list(self._deferred),
+            tables={r: list(t) for r, t in self.tables.items()},
+            ref=dict(self.ref), hash_of=dict(self._hash_of),
+            index=dict(self._index),
+            cached=collections.OrderedDict(self._cached),
+            commit=dict(self._commit), released=list(self._released),
+            swap_free=list(self._swap_free),
+            swapped_tables={r: list(t)
+                            for r, t in self.swapped_tables.items()},
+            counters=(self.swap_out_blocks, self.swap_in_blocks,
+                      self.swapped_peak, self.prefix_hit_tokens,
+                      self.prefix_query_tokens, self.cache_evictions,
+                      self.cow_copies))
+
+    def shadow_commit(self) -> None:
+        """Seal the epoch at step retirement: the step's reads are done, so
+        parked blocks rejoin the free list (in free order) and the rollback
+        snapshot is dropped. Safe to call with no epoch open (the first
+        retirement of a run) — it just flushes nothing."""
+        self._free.extend(self._deferred)
+        self._deferred = []
+        self._epoch_open = False
+        self._shadow_snap = None
+
+    def shadow_rollback(self) -> None:
+        """Abandon every table edit since `shadow_begin` and restore the
+        allocator to that snapshot — the recovery path when a dispatched
+        step must be discarded (and the invariant anchor the hypothesis
+        suite pins: begin -> arbitrary mutations -> rollback is a no-op)."""
+        if not self._epoch_open:
+            raise RuntimeError("no shadow epoch open to roll back")
+        s = self._shadow_snap
+        self._free = s["free"]
+        self._deferred = s["deferred"]
+        self.tables = s["tables"]
+        self.ref = s["ref"]
+        self._hash_of = s["hash_of"]
+        self._index = s["index"]
+        self._cached = s["cached"]
+        self._commit = s["commit"]
+        self._released = s["released"]
+        self._swap_free = s["swap_free"]
+        self.swapped_tables = s["swapped_tables"]
+        (self.swap_out_blocks, self.swap_in_blocks, self.swapped_peak,
+         self.prefix_hit_tokens, self.prefix_query_tokens,
+         self.cache_evictions, self.cow_copies) = s["counters"]
+        self._epoch_open = False
+        self._shadow_snap = None
 
     def acquire_prefix(self, rid: int, token_ids: Sequence[int]) -> int:
         """Match `token_ids` against the prefix index and map every shared
@@ -348,7 +437,7 @@ class BlockManager:
             hb = self._swap_free.pop()
             pairs.append((b, hb))
             host.append(hb)
-            self._free.append(b)
+            self._push_free(b)
         self.swapped_tables[rid] = host
         self._commit.pop(rid, None)
         self.swap_out_blocks += len(host)
@@ -406,7 +495,7 @@ class BlockManager:
             if self.prefix_cache and b in self._hash_of:
                 self._cached[b] = None          # most-recently-used end
             else:
-                self._free.append(b)
+                self._push_free(b)
                 freed.append(b)
         # a finished/cancelled request may still hold a swap ledger
         # (DESIGN §11): its host blocks return to the swap pool
@@ -416,6 +505,9 @@ class BlockManager:
 
     def reset(self) -> None:
         self._free = list(range(self.num_blocks))
+        self._deferred = []
+        self._epoch_open = False
+        self._shadow_snap = None
         self.tables.clear()
         self.ref.clear()
         self._hash_of.clear()

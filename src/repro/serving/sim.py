@@ -25,6 +25,7 @@ differential harness in `tests/test_differential.py` pins the parity):
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import heapq
 import random
@@ -101,6 +102,10 @@ class SimResult:
     sla_attainment: float = 0.0     # fraction of decode steps within SLA
     mean_batch: float = 0.0
     decode_steps: int = 0
+    # host-vs-device interval split (DESIGN §14): the cost model's
+    # host_overhead_ms share of each interval vs the device remainder
+    step_host_s_mean: float = 0.0
+    step_device_s_mean: float = 0.0
     # mesh-sharded pool (DESIGN §12) + end-of-run pool occupancy (§9/§10)
     model_shards: float = 1.0
     pool_tokens: float = 0.0
@@ -195,6 +200,15 @@ class ServingSimulator:
         self._swap_waits: List[float] = []
         self._sla_ok = 0
         self._sla_steps = 0
+        # async dispatch-ahead mirror (DESIGN §14): telemetry feeds lag
+        # behind scheduling by up to overlap_depth dispatched intervals,
+        # exactly like the engine's retirement pipeline; the clock charges
+        # max(host, device) per interval instead of host + device
+        self.overlap_depth = max(0, int(serve.overlap_depth))
+        self._feed_lag: "collections.deque[list]" = collections.deque()
+        self._feeds: list = []      # current interval's deferred feeds
+        self._host_s: List[float] = []
+        self._dev_s: List[float] = []
 
     # -- workload -------------------------------------------------------------
     def add_requests(self, n: int, arrival_rate: float = 0.0):
@@ -370,6 +384,40 @@ class ServingSimulator:
         self.running.append(r)
         return True
 
+    # -- async dispatch-ahead mirror (DESIGN §14) ------------------------------
+    def _tel_feed(self, fn, *args):
+        """Park a telemetry feed behind the interval's retirement: the
+        engine applies an interval's TBT/TTFT/throughput/completion feeds
+        only when its device step retires, up to overlap_depth intervals
+        later — the sim mirrors the same staleness so the twins' policies
+        read identical snapshots. Args are evaluated NOW (dispatch-time
+        values), only the application is deferred."""
+        self._feeds.append((fn, args))
+
+    def _retire_feeds(self, dispatched: bool):
+        """End-of-interval retirement mirror: queue the interval's feed
+        list iff it dispatched device work (the engine only pushes a
+        retirement record then), and retire down to the pipeline depth.
+        Depth 0 flushes the interval's own feeds before the next snapshot
+        — byte-identical to the synchronous loop."""
+        if dispatched:
+            self._feed_lag.append(self._feeds)
+            self._feeds = []
+        while len(self._feed_lag) > self.overlap_depth:
+            for fn, args in self._feed_lag.popleft():
+                fn(*args)
+
+    def _advance_clock(self, dt: float):
+        """Advance the sim clock by one interval's tau. Under overlap the
+        host share (admission, lane packing, block-table edits) runs
+        concurrently with the in-flight device step, so the interval
+        costs max(host, device) instead of host + device — the pipeline's
+        whole throughput win (DESIGN §14)."""
+        host, dev = self.cost.split_host_device(dt)
+        self._host_s.append(host)
+        self._dev_s.append(dev)
+        self.now += max(host, dev) if self.overlap_depth else dt
+
     # -- steps -------------------------------------------------------------------
     def _prefill_step(self, reqs: List[Request]):
         # context_len covers recompute-after-preemption (prompt + kept
@@ -382,15 +430,16 @@ class ServingSimulator:
             if r.prefill_start_time < 0:
                 r.prefill_start_time = self.now
         dt = self.cost.tau_step_s(0, 0.0, prefill_tokens=toks, prefill_ctx=ctx)
-        self.now += dt
+        self._advance_clock(dt)
         for r in reqs:
             r.state = RequestState.RUNNING
             r.first_token_time = self.now
             if self.prefix and r.prompt_tokens:
                 self.blocks.commit_prefill(r.rid, r.prompt_tokens,
                                            r.prompt_len)
-            self.tel.on_first_token(r.prefill_start_time - r.arrival_time,
-                                    self.now - r.prefill_start_time)
+            self._tel_feed(self.tel.on_first_token,
+                           r.prefill_start_time - r.arrival_time,
+                           self.now - r.prefill_start_time)
             # the engine samples the first output token from the prefill's
             # final logits — mirror the emission so step counts line up
             r.sim_emit_token()
@@ -432,7 +481,8 @@ class ServingSimulator:
                 lane_tokens[j] = take
             pf_tokens = sum(lane_tokens.values())
             if lane_tokens:
-                self.tel.on_prefill_interval(lane_tokens, self.n_lanes)
+                self._tel_feed(self.tel.on_prefill_interval, lane_tokens,
+                               self.n_lanes)
             # finished lanes promote BEFORE the decode batch forms
             # (lane-index order: deterministic, matches the engine) — a
             # promoted request decodes in its promotion interval
@@ -450,7 +500,7 @@ class ServingSimulator:
         mean_ctx = sum(r.context_len for r in self.running) / max(b, 1)
         dt = self.cost.tau_step_s(b, mean_ctx, prefill_tokens=pf_tokens,
                                   prefill_ctx=mean_ctx)
-        self.now += dt
+        self._advance_clock(dt)
         tbt_ms = dt * 1e3
         # a promoted request's first token comes from the final prefill
         # chunk's logits (the engine appends it at promotion), then it
@@ -458,11 +508,12 @@ class ServingSimulator:
         # interval, exactly like the engine
         for r in promoted:
             r.first_token_time = self.now
-            self.tel.on_first_token(r.prefill_start_time - r.arrival_time,
-                                    self.now - r.prefill_start_time)
+            self._tel_feed(self.tel.on_first_token,
+                           r.prefill_start_time - r.arrival_time,
+                           self.now - r.prefill_start_time)
             r.sim_emit_token()
         if b:
-            self.tel.on_decode_step(tbt_ms, b)
+            self._tel_feed(self.tel.on_decode_step, tbt_ms, b)
             self._tbts.append(tbt_ms)
             self.res.decode_steps += 1
             self._sla_steps += 1
@@ -491,7 +542,7 @@ class ServingSimulator:
         for r in reversed(finished):
             r.state = RequestState.FINISHED
             r.finish_time = self.now
-            self.tel.on_completion(r.output_len)
+            self._tel_feed(self.tel.on_completion, r.output_len)
             self.blocks.free(r.rid)
             self.running.remove(r)
             self.res.finished += 1
@@ -499,6 +550,9 @@ class ServingSimulator:
             if r in self.running:
                 self._recompute_evict(r)
         self.res.batch_trace.append(b)
+        # the engine only queues a retirement record when a graph was
+        # dispatched — mirror that so the feed pipeline's cadence matches
+        return pf_tokens > 0 or b > 0
 
     # -- main loop -----------------------------------------------------------------
     def run(self, max_steps: int = 200_000) -> SimResult:
@@ -528,20 +582,27 @@ class ServingSimulator:
                     # budget would spin no-op steps forever
                     budget = self.prefill_chunk \
                         or pending_prefill[0].prompt_len
-                self._decode_step(pending_prefill, budget)
+                dispatched = self._decode_step(pending_prefill, budget)
             else:
                 # engine order: admitted requests prefill immediately
                 # (inside the engine's admission loop), THEN the pool
                 # pressure check runs — just-prefilled requests are
                 # preemption candidates like any other
+                dispatched = bool(admitted)
                 if admitted:
                     self._prefill_step(admitted)
                 self._preempt_if_needed()
                 if self.running:
-                    self._decode_step([], 0)
+                    dispatched = self._decode_step([], 0) or dispatched
             # no physical pos rows to clear in the sim — drain the
             # eviction queue so it cannot grow for the run's lifetime
             self.blocks.take_released()
+            self._retire_feeds(dispatched)
+        # pipeline drain, engine-mirrored: the engine's final idle step()
+        # retires every in-flight interval before reporting idle
+        while self._feed_lag:
+            for fn, args in self._feed_lag.popleft():
+                fn(*args)
         self.res.duration_s = self.now
         ttfts = sorted(r.first_token_time - r.arrival_time
                        for r in self._all if r.first_token_time >= 0)
@@ -566,6 +627,9 @@ class ServingSimulator:
             self.res.tbt_ms_p95 = s[int(0.95 * (len(s) - 1))]
         if self._sla_steps:
             self.res.sla_attainment = self._sla_ok / self._sla_steps
+        if self._host_s:
+            self.res.step_host_s_mean = sum(self._host_s) / len(self._host_s)
+            self.res.step_device_s_mean = sum(self._dev_s) / len(self._dev_s)
         if self.res.batch_trace:
             self.res.mean_batch = sum(self.res.batch_trace) / len(self.res.batch_trace)
         self.res.prefix_hit_tokens = self.blocks.prefix_hit_tokens

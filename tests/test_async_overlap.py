@@ -1,0 +1,271 @@
+"""Async dispatch-ahead pipeline tests (DESIGN §14).
+
+Two halves:
+
+* engine bitwise identity — the acceptance criterion: for the same
+  workload, `overlap_depth=1` (and deeper) must produce BITWISE-identical
+  output tokens, step counts and scheduling counters as the synchronous
+  loop (`overlap_depth=0`), across paged/contiguous layouts, PD fusion
+  on/off, and the two-tier swap path. The pipeline defers token readback
+  and telemetry feeds, never values: every scheduling decision is
+  value-independent (token COUNTS drive finishes/grows/preemption), and
+  deferred inputs are spliced back in on device.
+
+* shadow-epoch invariants (hypothesis) — the BlockManager machinery the
+  pipeline leans on: an open epoch parks frees without changing any
+  headroom count (epoch-free twin parity), deferred blocks are reused
+  only after the free list drains, `shadow_commit` returns them in free
+  order, and `shadow_begin` -> arbitrary mutations -> `shadow_rollback`
+  is a no-op.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import random as _random
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.config.base import ServeConfig
+from repro.config.registry import get_config
+from repro.models.model import build_model
+from repro.serving.engine import Engine
+from repro.serving.kv_cache import BlockManager
+
+MAX_CONTEXT = 96
+_MODEL = {}
+
+_COUNTERS = ("finished", "admitted", "preemptions", "oom_events",
+             "rejected", "decode_steps", "total_tokens", "prefill_tokens",
+             "swap_outs", "swap_ins", "swap_out_bytes", "swap_in_bytes",
+             "cache_evictions", "copy_rows")
+
+
+def setup_model():
+    if not _MODEL:
+        cfg = get_config("granite-3-8b", "reduced")
+        m = build_model(cfg, dtype=jnp.float32)
+        _MODEL["cfg"] = cfg
+        _MODEL["m"] = m
+        _MODEL["params"] = m.init(jax.random.PRNGKey(0))
+    return _MODEL["cfg"], _MODEL["m"], _MODEL["params"]
+
+
+def run_engine(depth, *, paged=True, chunked=True, swap_blocks=0,
+               pool_tokens=1024, policy="memory", b_max=8,
+               prompt_lens=(5, 9, 17, 4, 23, 12), max_new=6, seed=0):
+    """One full engine run; returns (steps, per-request outputs, summary)."""
+    cfg, m, params = setup_model()
+    serve = ServeConfig(policy=policy, b_max=b_max, block_size=16,
+                        max_new_tokens=max_new, kv_pool_tokens=pool_tokens,
+                        paged_kv=paged, chunked_prefill=chunked,
+                        chunk_budget_tokens=16, n_prefill_lanes=2,
+                        batch_buckets=(1, 2, 4, 8),
+                        swap_space_blocks=swap_blocks,
+                        preempt="swap" if swap_blocks else "auto",
+                        overlap_depth=depth)
+    eng = Engine(m, params, serve, max_context=MAX_CONTEXT,
+                 buckets=(1, 2, 4, 8), prefill_chunk=8)
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for n in prompt_lens:
+        toks = list(map(int, rng.randint(0, cfg.vocab_size, size=n)))
+        reqs.append(eng.submit(toks, arrival_time=0.0))
+    steps = eng.run(max_steps=20_000)
+    # retirement patched every placeholder: no residual Nones anywhere
+    for r in reqs:
+        assert all(t is not None for t in r.output_tokens), r.rid
+    return steps, [tuple(r.output_tokens) for r in reqs], eng.summary(), eng
+
+
+def assert_bitwise(depth, **kw):
+    s0, o0, m0, _ = run_engine(0, **kw)
+    s1, o1, m1, e1 = run_engine(depth, **kw)
+    ctx = f"depth={depth} {kw}"
+    assert o0 == o1, ctx
+    assert s0 == s1, ctx
+    for k in _COUNTERS:
+        assert m0[k] == m1[k], (ctx, k, m0[k], m1[k])
+    # the pipeline fully drained before run() reported idle
+    assert not e1._inflight, ctx
+    return m0, m1
+
+
+@pytest.mark.parametrize("paged,chunked", [(True, True), (True, False),
+                                           (False, True), (False, False)])
+def test_bitwise_sync_vs_async(paged, chunked):
+    """Depth 1 == depth 0, bit for bit, on all four layout/fusion combos."""
+    assert_bitwise(1, paged=paged, chunked=chunked)
+
+
+def test_bitwise_under_swap_pressure():
+    """A pool tight enough to force swap-out/swap-in preemptions keeps
+    bitwise identity: a swapped request's pending (un-retired) token
+    survives offload and feeds its post-restore decode unchanged."""
+    m0, m1 = assert_bitwise(1, paged=True, chunked=True, swap_blocks=16,
+                            pool_tokens=160, policy="static", b_max=4,
+                            prompt_lens=(40, 44, 38, 46), max_new=12,
+                            seed=1)
+    assert m0["preemptions"] > 0 and m0["swap_ins"] > 0
+
+
+def test_bitwise_depth_two():
+    """The pipeline generalizes past one interval: pending device tokens
+    chain across consecutive un-retired decode steps."""
+    assert_bitwise(2, paged=True, chunked=True)
+
+
+def test_host_device_split_recorded():
+    """Satellite: the engine's summary carries the host-vs-device interval
+    split, and the two traces partition each step's wall time."""
+    _, _, summ, eng = run_engine(1, paged=True, chunked=True)
+    assert summ["step_host_s_mean"] > 0.0
+    assert summ["step_device_s_mean"] > 0.0
+    assert len(eng.step_host_trace) == len(eng.step_device_trace)
+
+
+def test_timestamps_stamped_at_retirement():
+    """Satellite: TTFT/TBT/finish timestamps are stamped when the device
+    step retires, so at depth 1 a request's first_token_time can only
+    move LATER than dispatch — never before its prefill started."""
+    _, _, _, eng = run_engine(1, paged=True, chunked=True)
+    done = [r for r in (eng.waiting + eng.active) ] # drained: both empty
+    assert not done
+    for tr in eng.ttft_trace:
+        assert tr >= 0.0
+    assert len(eng.tbt_trace) == eng.decode_steps
+
+
+# ---------------------------------------------------------------------------
+# shadow-epoch invariants (pure BlockManager: fast, hypothesis-driven)
+
+
+def _drive(bm, rng, n_ops, twin=None, commit_every=0):
+    """Random allocate/free traffic; mirrored onto `twin` (epoch-free)
+    when given. Returns per-op (free_blocks, physical, ok) observations."""
+    live = []
+    obs = []
+    for i in range(n_ops):
+        op = rng.random()
+        if op < 0.55 or not live:
+            rid = rng.randrange(1000)
+            if rid in bm.tables or rid in getattr(bm, "swapped_tables", {}):
+                continue
+            toks = rng.randrange(1, 4 * bm.block_size)
+            ok = bm.allocate(rid, 0, toks)
+            if twin is not None:
+                assert twin.allocate(rid, 0, toks) == ok
+            if ok:
+                live.append(rid)
+            else:
+                bm.free(rid)
+                if twin is not None:
+                    twin.free(rid)
+        else:
+            rid = live.pop(rng.randrange(len(live)))
+            bm.free(rid)
+            if twin is not None:
+                twin.free(rid)
+        if commit_every and i % commit_every == commit_every - 1:
+            bm.shadow_commit()
+            bm.shadow_begin()
+        obs.append((bm.free_blocks, bm.physical_free_blocks))
+        if twin is not None:
+            assert (twin.free_blocks, twin.physical_free_blocks) == obs[-1]
+    return obs
+
+
+@given(st.integers(0, 10_000), st.integers(4, 24), st.integers(0, 5))
+@settings(max_examples=40, deadline=None)
+def test_epoch_count_invariance(seed, pool_blocks, commit_every):
+    """Headroom parity: a manager running open shadow epochs (with commits
+    at arbitrary cadence) reports the same free_blocks /
+    physical_free_blocks and the same allocation verdicts as an epoch-free
+    twin under identical traffic — epochs change WHICH ids are reused,
+    never whether an allocation succeeds (DESIGN §14)."""
+    rng = _random.Random(seed)
+    bm = BlockManager(pool_blocks * 16, 16)
+    twin = BlockManager(pool_blocks * 16, 16)
+    bm.shadow_begin()
+    _drive(bm, rng, 60, twin=twin, commit_every=commit_every)
+    bm.shadow_commit()
+    assert (bm.free_blocks, bm.physical_free_blocks) \
+        == (twin.free_blocks, twin.physical_free_blocks)
+
+
+def _observable(bm):
+    return (list(bm._free), list(bm._deferred),
+            {r: list(t) for r, t in bm.tables.items()},
+            dict(bm.ref), list(bm._cached), dict(bm._hash_of),
+            {r: list(t) for r, t in bm.swapped_tables.items()},
+            bm.swap_out_blocks, bm.swap_in_blocks, bm.swapped_peak,
+            bm.prefix_hit_tokens, bm.prefix_query_tokens,
+            bm.cache_evictions, bm.cow_copies)
+
+
+@given(st.integers(0, 10_000), st.integers(4, 24))
+@settings(max_examples=40, deadline=None)
+def test_shadow_rollback_restores(seed, pool_blocks):
+    """begin -> arbitrary mutations -> rollback is a no-op: every piece of
+    allocator state (free order included) returns to the snapshot."""
+    rng = _random.Random(seed)
+    bm = BlockManager(pool_blocks * 16, 16, prefix_cache=True)
+    _drive(bm, rng, 20)          # non-trivial starting state, no epoch
+    before = _observable(bm)
+    bm.shadow_begin()
+    _drive(bm, rng, 30)
+    bm.shadow_rollback()
+    assert _observable(bm) == before
+    # rollback closed the epoch: a new begin is legal, a second rollback
+    # is not
+    with pytest.raises(RuntimeError):
+        bm.shadow_rollback()
+    bm.shadow_begin()
+    bm.shadow_commit()
+
+
+@given(st.integers(0, 10_000), st.integers(4, 16))
+@settings(max_examples=30, deadline=None)
+def test_shadow_commit_flushes_in_free_order(seed, pool_blocks):
+    """Commit returns every parked block to the free list (deferred order
+    preserved at the reuse end), leaves totals unchanged, and tolerates
+    being called with no epoch open (the run's first retirement)."""
+    rng = _random.Random(seed)
+    bm = BlockManager(pool_blocks * 16, 16)
+    bm.shadow_commit()           # no epoch open: a legal no-op
+    bm.shadow_begin()
+    _drive(bm, rng, 25)
+    free_before = bm.free_blocks
+    parked = list(bm._deferred)
+    bm.shadow_commit()
+    assert bm._deferred == []
+    assert bm.free_blocks == free_before
+    assert bm._free[len(bm._free) - len(parked):] == parked
+    with pytest.raises(RuntimeError):
+        bm.shadow_rollback()     # nothing open after a commit
+
+
+def test_deferred_reused_only_after_free_list_drains():
+    """While the free list is non-empty, allocation never touches parked
+    blocks; once it drains, parked blocks are reused oldest-first, and
+    only then does the cached (prefix) pool get evicted."""
+    bm = BlockManager(8 * 16, 16)
+    assert bm.allocate(1, 0, 3 * 16)
+    bm.shadow_begin()
+    bm.free(1)
+    parked = list(bm._deferred)
+    assert len(parked) == 3
+    # 5 blocks remain truly free: they must all be consumed first
+    assert bm.allocate(2, 0, 5 * 16)
+    assert not any(b in parked for b in bm.tables[2])
+    # next allocation can only be served from the parked set, oldest first
+    assert bm.allocate(3, 0, 2 * 16)
+    assert bm.tables[3] == parked[:2]
+    bm.shadow_commit()
+
+
+def test_epoch_double_begin_raises():
+    bm = BlockManager(4 * 16, 16)
+    bm.shadow_begin()
+    with pytest.raises(RuntimeError):
+        bm.shadow_begin()
+    bm.shadow_rollback()
