@@ -10,7 +10,7 @@ def csv_out(name: str, us_per_call: float, derived: str) -> None:
 
 
 BENCHES = ("fig3", "table1", "table2", "fig4", "ablation", "burst",
-           "prefix", "swap", "tp", "async", "roofline")
+           "prefix", "swap", "tp", "async", "trace", "roofline")
 
 
 def main() -> None:
@@ -42,6 +42,8 @@ def main() -> None:
                 from benchmarks.tp_serving import run
             elif name == "async":
                 from benchmarks.async_overlap import run
+            elif name == "trace":
+                from benchmarks.trace_replay import run
             else:
                 from benchmarks.roofline import run
             run(csv_out)

@@ -229,6 +229,14 @@ class ServeConfig:
     b_max: int = 256               # B_max (static policy uses this as THE batch size)
     d_sla_ms: float = 0.0          # D_SLA; 0 => no SLA constraint
     eps_d_ms: float = 2.0          # ε_D latency tolerance band
+    # per-request goodput SLOs (DESIGN §15), distinct from the per-step
+    # controller SLA d_sla_ms: a finished request meets the SLA iff its
+    # TTFT <= ttft_sla_s AND its mean TBT <= tbt_sla_ms; goodput counts
+    # only SLA-met requests' tokens. 0 disables that check (every
+    # finished request then passes it). Verdicts stamp at retirement in
+    # the engine and at finish in the sim (rejected requests never meet).
+    ttft_sla_s: float = 0.0
+    tbt_sla_ms: float = 0.0
     eps_m: float = 0.05            # ε_M memory-overflow probability budget
     alpha: int = 16                # Alg 2 window-width control α
     delta: int = 4                 # Alg 2 anti-noise relaxation δ

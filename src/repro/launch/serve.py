@@ -76,6 +76,20 @@ def main():
                          "default: powers of two up to --b-max")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    # trace replay + per-request goodput SLOs (DESIGN §15)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="replay a repro-trace JSONL file (DESIGN §15) "
+                         "instead of synthesizing random prompts: token "
+                         "records submit verbatim (ids clamped into the "
+                         "model vocab), length-only records get synthetic "
+                         "tokens, per-request max-new = min(l_out, "
+                         "--max-new); overrides --requests")
+    ap.add_argument("--ttft-sla", type=float, default=0.0, metavar="S",
+                    help="per-request TTFT goodput SLA in seconds "
+                         "(ttft_sla_s); 0 disables the check (DESIGN §15)")
+    ap.add_argument("--tbt-sla", type=float, default=0.0, metavar="MS",
+                    help="per-request mean-TBT goodput SLA in ms "
+                         "(tbt_sla_ms); 0 disables the check (DESIGN §15)")
     ap.add_argument("--pool-tokens", type=int, default=4096)
     ap.add_argument("--max-context", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
@@ -157,6 +171,8 @@ def main():
     serve = ServeConfig(policy=args.policy,
                         b_min=args.b_min, b_max=args.b_max,
                         d_sla_ms=args.sla_ms,
+                        ttft_sla_s=args.ttft_sla,
+                        tbt_sla_ms=args.tbt_sla,
                         eps_d_ms=args.eps_d, eps_m=args.eps_m,
                         alpha=args.alpha, delta=args.delta,
                         block_size=args.block_size,
@@ -182,15 +198,29 @@ def main():
                  cost=CostModel(cfg, PROFILES[args.profile]))
 
     rng = np.random.RandomState(args.seed)
-    for _ in range(args.requests):
-        extras = None
-        if enc_len:
-            key = "enc_frames" if cfg.family.value == "encdec" else "images"
-            extras = {key: jnp.asarray(rng.randn(1, enc_len, cfg.d_model),
-                                       jnp.float32)}
-        eng.submit(list(map(int, rng.randint(0, cfg.vocab_size,
-                                             size=rng.randint(4, 24)))),
-                   extras=extras)
+
+    def mk_extras():
+        if not enc_len:
+            return None
+        key = "enc_frames" if cfg.family.value == "encdec" else "images"
+        return {key: jnp.asarray(rng.randn(1, enc_len, cfg.d_model),
+                                 jnp.float32)}
+
+    if args.trace:
+        # trace replay (DESIGN §15): submissions follow the trace's file
+        # order; service is as-fast-as-possible (the engine clock is
+        # wall time, arrival gating lives in the simulator twin)
+        from repro.serving.workload import load_trace_events, trace_prompts
+        events = load_trace_events(args.trace)
+        for toks, lo in trace_prompts(events, cfg.vocab_size,
+                                      seed=args.seed):
+            eng.submit(toks, max_new_tokens=max(1, min(lo, args.max_new)),
+                       extras=mk_extras())
+    else:
+        for _ in range(args.requests):
+            eng.submit(list(map(int, rng.randint(0, cfg.vocab_size,
+                                                 size=rng.randint(4, 24)))),
+                       extras=mk_extras())
     eng.run()
     print({k: round(v, 2) for k, v in eng.summary().items()})
 

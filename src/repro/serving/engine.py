@@ -245,6 +245,11 @@ class Engine:
         self.preemptions = 0      # evictions, recompute + swap-out alike
         self.oom_events = 0       # admission refusals at the watermark
         self.rejected = 0         # requests too large for the pool, dropped
+        # per-request goodput SLOs (DESIGN §15): verdicts stamp at
+        # retirement (timestamps are final there); rejected requests
+        # count against attainment
+        self.sla_requests_met = 0
+        self.goodput_tokens = 0
         self.swap_outs = 0        # victims offloaded to the host pool
         self.swap_ins = 0         # offloaded requests restored
         self.swap_out_bytes = 0
@@ -639,6 +644,9 @@ class Engine:
                     r.state = RequestState.FINISHED
                     r.rejected = True
                     r.finish_time = self._now()
+                    # goodput verdict (DESIGN §15): a dropped request
+                    # counts against attainment, never for it
+                    r.stamp_sla(self.serve.ttft_sla_s, self.serve.tbt_sla_ms)
                     self.rejected += 1
                     continue
                 self.oom_events += 1
@@ -1216,6 +1224,11 @@ class Engine:
                 self._sla_ok += 1
         for r, n_out in rec.completions:
             r.finish_time = now
+            # goodput verdict (DESIGN §15): stamped at retirement — the
+            # firsts loop above has already finalized first_token_time
+            if r.stamp_sla(self.serve.ttft_sla_s, self.serve.tbt_sla_ms):
+                self.sla_requests_met += 1
+                self.goodput_tokens += n_out
             self.tel.on_completion(n_out)
         # seal the shadow epoch: blocks freed since the last retirement
         # are safe for arbitrary reuse now that the step that could still
@@ -1249,6 +1262,13 @@ class Engine:
             "tbt_ms_p95": tbts[int(0.95 * (len(tbts) - 1))] if tbts else 0.0,
             "sla_attainment": (self._sla_ok / self._sla_steps)
             if self._sla_steps else 0.0,
+            # per-request goodput SLOs (DESIGN §15): throughput counting
+            # only SLA-met requests' tokens
+            "goodput_tok_s": self.goodput_tokens / max(el, 1e-9),
+            "goodput_tokens": float(self.goodput_tokens),
+            "sla_requests_met": self.sla_requests_met,
+            "request_sla_attainment": self.sla_requests_met
+            / max(self.total_finished + self.rejected, 1),
             # host-vs-device interval split (DESIGN §14)
             "step_host_s_mean": (sum(self.step_host_trace)
                                  / len(self.step_host_trace))

@@ -45,6 +45,12 @@ class Request:
     swap_out_time: float = -1.0                  # pending swap-out timestamp
     swapped_s: float = 0.0                       # total time spent offloaded
     n_swaps: int = 0                             # completed swap round trips
+    # per-request goodput SLA verdict (DESIGN §15): stamped once — at
+    # retirement in the engine, at finish/rejection in the sim — distinct
+    # from the per-step `sla_attainment` window of d_sla_ms
+    ttft_ok: bool = False
+    tbt_ok: bool = False
+    sla_met: bool = False
 
     def __post_init__(self):
         if self.prompt_tokens is not None and self.prompt_len == 0:
@@ -68,6 +74,29 @@ class Request:
         victim's output from scratch on re-admission, so the sim twin
         drops the emitted count to mirror it step-for-step (DESIGN §11)."""
         self._sim_outlen = 0
+
+    def stamp_sla(self, ttft_sla_s: float, tbt_sla_ms: float) -> bool:
+        """Stamp the per-request goodput verdict (DESIGN §15).
+
+        TTFT = first_token_time - arrival_time; mean TBT = the decode
+        span (finish - first token) over the n-1 inter-token gaps (0 when
+        at most one token was produced). A threshold of 0 disables that
+        check; rejected (or never-served) requests never meet the SLA.
+        Both twins compute the verdict from the same three timestamps, so
+        the differential harness can compare them request for request."""
+        if self.rejected or self.first_token_time < 0:
+            self.ttft_ok = self.tbt_ok = self.sla_met = False
+            return False
+        ttft = self.first_token_time - self.arrival_time
+        self.ttft_ok = ttft_sla_s <= 0 or ttft <= ttft_sla_s
+        n_out = max(len(self.output_tokens), self._sim_outlen)
+        tbt_ms = 0.0
+        if n_out > 1 and self.finish_time >= 0:
+            tbt_ms = (self.finish_time - self.first_token_time) \
+                / (n_out - 1) * 1e3
+        self.tbt_ok = tbt_sla_ms <= 0 or tbt_ms <= tbt_sla_ms
+        self.sla_met = self.ttft_ok and self.tbt_ok
+        return self.sla_met
 
     @property
     def done(self) -> bool:

@@ -100,6 +100,13 @@ class SimResult:
     prefill_lane_occupancy: float = 0.0  # mean busy-lane fraction, fused steps
     prefill_tokens: float = 0.0     # total prefill tokens packed (DESIGN §6)
     sla_attainment: float = 0.0     # fraction of decode steps within SLA
+    # per-request goodput SLOs (DESIGN §15): requests meeting BOTH the
+    # TTFT and mean-TBT SLAs, their token volume, and the attainment
+    # fraction over finished + rejected (dropping a request counts
+    # against attainment — rejection can never inflate it)
+    sla_requests_met: int = 0
+    goodput_tokens: int = 0
+    request_sla_attainment: float = 0.0
     mean_batch: float = 0.0
     decode_steps: int = 0
     # host-vs-device interval split (DESIGN §14): the cost model's
@@ -120,6 +127,11 @@ class SimResult:
     @property
     def throughput_tok_s(self) -> float:
         return self.total_tokens / max(self.duration_s, 1e-9)
+
+    @property
+    def goodput_tok_s(self) -> float:
+        """Throughput counting only SLA-met requests' tokens (DESIGN §15)."""
+        return self.goodput_tokens / max(self.duration_s, 1e-9)
 
 
 class ServingSimulator:
@@ -212,17 +224,25 @@ class ServingSimulator:
 
     # -- workload -------------------------------------------------------------
     def add_requests(self, n: int, arrival_rate: float = 0.0):
-        """arrival_rate == 0 => infinite backlog (all at t=0, paper Table I)."""
+        """arrival_rate == 0 => infinite backlog (all at t=0, paper Table I).
+
+        Safe to call repeatedly (and to mix with workload.feed/_tokens/
+        _trace): rids offset past the existing population, `_all` grows by
+        only the new requests."""
+        base = len(self._all)
         t = 0.0
+        new = []
         for i in range(n):
             li, lo = self.lengths.sample(self.rng)
-            self.waiting.append(Request(
-                rid=i, arrival_time=t, prompt_len=li, true_output_len=lo,
+            new.append(Request(
+                rid=base + i, arrival_time=t, prompt_len=li,
+                true_output_len=lo,
                 max_new_tokens=self.serve.max_new_tokens))
             if arrival_rate > 0:
                 t += self.rng.expovariate(arrival_rate)
+        self.waiting.extend(new)
         self.waiting.sort(key=lambda r: r.arrival_time)
-        self._all.extend(self.waiting)
+        self._all.extend(new)
 
     # -- scheduling interval ----------------------------------------------------
     def _snapshot(self):
@@ -286,6 +306,10 @@ class ServingSimulator:
                     self.waiting.remove(r)
                     r.state = RequestState.FINISHED
                     r.rejected = True
+                    # goodput verdict (DESIGN §15): a dropped request
+                    # counts against attainment, never for it
+                    r.stamp_sla(self.serve.ttft_sla_s,
+                                self.serve.tbt_sla_ms)
                     self.res.rejected += 1
                     continue
                 self.res.oom_events += 1
@@ -542,6 +566,11 @@ class ServingSimulator:
         for r in reversed(finished):
             r.state = RequestState.FINISHED
             r.finish_time = self.now
+            # goodput verdict (DESIGN §15): the sim's mirror of the
+            # engine's retirement stamping — timestamps are final here
+            if r.stamp_sla(self.serve.ttft_sla_s, self.serve.tbt_sla_ms):
+                self.res.sla_requests_met += 1
+                self.res.goodput_tokens += r.output_len
             self._tel_feed(self.tel.on_completion, r.output_len)
             self.blocks.free(r.rid)
             self.running.remove(r)
@@ -627,6 +656,8 @@ class ServingSimulator:
             self.res.tbt_ms_p95 = s[int(0.95 * (len(s) - 1))]
         if self._sla_steps:
             self.res.sla_attainment = self._sla_ok / self._sla_steps
+        self.res.request_sla_attainment = self.res.sla_requests_met \
+            / max(self.res.finished + self.res.rejected, 1)
         if self._host_s:
             self.res.step_host_s_mean = sum(self._host_s) / len(self._host_s)
             self.res.step_device_s_mean = sum(self._dev_s) / len(self._dev_s)

@@ -25,6 +25,7 @@ from repro.serving.cost_model import CostModel, PROFILES
 from repro.serving.engine import Engine
 from repro.serving.request import Request
 from repro.serving.sim import LengthDist, ServingSimulator
+from repro.serving.workload import reference_trace
 
 MAX_CONTEXT = 96
 _MODEL = {}
@@ -88,6 +89,14 @@ def assert_parity(eng, hs, sim, res, ctx=""):
     eng_rej = {h.rid for h in hs if h.rejected}
     sim_rej = {r.rid for r in sim._all if r.rejected}
     assert eng_rej == sim_rej, ctx
+    # per-request goodput verdicts (DESIGN §15) agree request for
+    # request: under the regimes this harness runs (SLA disabled, or
+    # unmeetable) wall-clock and sim-clock verdicts provably coincide
+    assert eng.sla_requests_met == res.sla_requests_met, ctx
+    assert eng.goodput_tokens == res.goodput_tokens, ctx
+    eng_met = {h.rid for h in hs if h.sla_met}
+    sim_met = {r.rid for r in sim._all if r.sla_met}
+    assert eng_met == sim_met, ctx
     # both drained completely
     assert not eng.waiting and not eng.active and not eng.prefilling \
         and not eng.swapped, ctx
@@ -96,13 +105,50 @@ def assert_parity(eng, hs, sim, res, ctx=""):
 
 
 def serve_cfg(*, policy="static", b_max=4, pool_tokens=256, swap_blocks=0,
-              chunked=True, lanes=2, budget=24, preempt="auto", overlap=0):
+              chunked=True, lanes=2, budget=24, preempt="auto", overlap=0,
+              ttft_sla=0.0):
     return ServeConfig(policy=policy, b_max=b_max, max_new_tokens=6,
                        kv_pool_tokens=pool_tokens, block_size=16,
                        chunked_prefill=chunked, chunk_budget_tokens=budget,
                        n_prefill_lanes=lanes, paged_kv=True,
                        swap_space_blocks=swap_blocks, preempt=preempt,
-                       overlap_depth=overlap)
+                       overlap_depth=overlap, ttft_sla_s=ttft_sla)
+
+
+def run_trace_pair(events, serve):
+    """Replay the identical multi-turn trace through the real engine and
+    the simulator twin (arrival times collapsed to 0, matching run_pair's
+    convention — the engine clock is wall time). Per-request output
+    budgets follow the trace: max_new = min(l_out, config, context cap)
+    on both sides, so the twins stop each request identically."""
+    cfg, m, params = setup_model()
+    cost = CostModel(cfg, PROFILES["a100x8"])
+    eng = Engine(m, params, serve, max_context=MAX_CONTEXT,
+                 buckets=(1, 2, 4, 8), prefill_chunk=8, cost=cost)
+    hs = []
+    for e in events:
+        hs.append(eng.submit(list(e.tokens),
+                             max_new_tokens=min(e.l_out,
+                                                serve.max_new_tokens),
+                             arrival_time=0.0))
+    eng.run(max_steps=20_000)
+
+    mi = sum(e.prompt_len for e in events) / len(events)
+    mo = sum(e.l_out for e in events) / len(events)
+    sim = ServingSimulator(cfg, serve, cost,
+                           LengthDist(mean_in=mi, mean_out=mo),
+                           seed=0, prefill_chunk=8, max_context=MAX_CONTEXT)
+    sim.tel = Telemetry()
+    for i, e in enumerate(events):
+        # engine.submit caps max_new at the context budget; mirror it
+        mx = min(e.l_out, serve.max_new_tokens,
+                 MAX_CONTEXT - e.prompt_len - 1)
+        sim.waiting.append(Request(rid=i, arrival_time=0.0,
+                                   prompt_tokens=list(e.tokens),
+                                   max_new_tokens=mx))
+    sim._all.extend(sim.waiting)
+    res = sim.run(max_steps=20_000)
+    return eng, hs, sim, res
 
 
 # ---------------------------------------------------------------------------
@@ -162,6 +208,39 @@ def test_differential_async_overlap(overlap):
     # the host/device split twins exist and partition the interval
     assert eng.summary()["step_host_s_mean"] > 0.0
     assert res.step_host_s_mean > 0.0 and res.step_device_s_mean > 0.0
+
+
+@pytest.mark.parametrize("swap_blocks,overlap,sla", [
+    (0, 0, 0.0),        # plain pipeline, SLA checks disabled
+    (0, 2, 1e-9),       # dispatch-ahead depth 2, unmeetable TTFT SLO
+    (16, 0, 1e-9),      # two-tier swap on, unmeetable TTFT SLO
+    (16, 2, 0.0),       # swap + overlap together, SLA disabled
+])
+def test_differential_traced_load(swap_blocks, overlap, sla):
+    """Replayed multi-turn trace (DESIGN §15) through both twins: exact
+    parity on admitted/finished/rejected AND the goodput counters, with
+    swap on/off and overlap depth 0/2. SLA regimes are chosen so the
+    wall-clock (engine) and sim-clock verdicts provably coincide:
+    disabled => met == finished; unmeetable => met == 0."""
+    events = reference_trace(14, seed=5, vocab_size=512, base_rate=4.0,
+                             burst_rate=16.0, period_s=20.0, duty=0.25,
+                             n_system_prompts=2, system_len=12,
+                             user_mean=8.0, out_mean=5.0, length_cv=0.5,
+                             p_followup=0.7, max_turns=3, turn_gap_s=2.0)
+    assert any(e.parent_id is not None for e in events)
+    serve = serve_cfg(policy="memory", pool_tokens=160, b_max=4,
+                      swap_blocks=swap_blocks,
+                      preempt="swap" if swap_blocks else "auto",
+                      overlap=overlap, ttft_sla=sla)
+    eng, hs, sim, res = run_trace_pair(events, serve)
+    # every traced request resolves (finished or rejected) on both sides
+    assert all(h.state.value == "finished" or h.rejected for h in hs)
+    if sla > 0.0:
+        assert eng.sla_requests_met == 0 and res.sla_requests_met == 0
+    else:
+        assert eng.sla_requests_met == eng.total_finished
+    assert_parity(eng, hs, sim, res,
+                  ctx=f"swap={swap_blocks} overlap={overlap} sla={sla}")
 
 
 # ---------------------------------------------------------------------------

@@ -26,8 +26,10 @@ def test_design_exists_with_numbered_sections():
     secs = design_sections()
     # the sections the issues demand: controller stack, memory model
     # (eq. 12/14), bucketized static shapes, PD fusion, paged KV, prefix
-    # sharing, the two-tier swap space, and mesh-sharded serving
-    assert {"1", "2", "3", "6", "9", "10", "11", "12", "13"} <= secs, secs
+    # sharing, the two-tier swap space, mesh-sharded serving, the async
+    # pipeline, and trace replay + goodput
+    assert {"1", "2", "3", "6", "9", "10", "11", "12", "13", "14",
+            "15"} <= secs, secs
 
 
 def test_source_design_references_resolve():

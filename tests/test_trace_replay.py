@@ -1,0 +1,235 @@
+"""Trace schema persistence + per-request goodput SLA verdicts
+(DESIGN §15): versioned save/load roundtrip for length- and token-level
+streams, strict line validation with path:line errors, out-of-order
+sorting, the bundled reference-trace generator's conversation structure,
+and goodput accounting through the simulator."""
+import json
+
+import pytest
+
+from repro.config.base import ServeConfig
+from repro.config.registry import get_config
+from repro.serving.cost_model import CostModel, PROFILES
+from repro.serving.request import Request
+from repro.serving.sim import LengthDist, ServingSimulator
+from repro.serving.workload import (TRACE_SCHEMA, TRACE_VERSION, TraceEvent,
+                                    TraceFormatError, feed_trace, load_trace,
+                                    load_trace_events, poisson,
+                                    reference_trace, save_trace,
+                                    shared_prefix, trace_prompts)
+
+L = LengthDist(mean_in=48, mean_out=24, fixed=True)
+
+
+def _sim(serve=None):
+    cfg = get_config("granite-3-8b")
+    cost = CostModel(cfg, PROFILES["a100x8"])
+    serve = serve or ServeConfig(policy="memory", b_max=64,
+                                 max_new_tokens=64)
+    return ServingSimulator(cfg, serve, cost, L, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# persistence: versioned roundtrip for both stream kinds
+
+
+def test_roundtrip_lengths(tmp_path):
+    arr = poisson(5.0, 50, L, seed=1)
+    p = str(tmp_path / "lengths.jsonl")
+    save_trace(p, arr)
+    assert load_trace(p) == arr
+    header = json.loads(open(p).readline())
+    assert header == {"schema": TRACE_SCHEMA, "version": TRACE_VERSION,
+                      "kind": "lengths"}
+
+
+def test_roundtrip_tokens(tmp_path):
+    arr = shared_prefix(rate=5.0, n=40, vocab_size=300, seed=2)
+    p = str(tmp_path / "tokens.jsonl")
+    save_trace(p, arr)
+    assert load_trace(p) == arr
+    assert json.loads(open(p).readline())["kind"] == "tokens"
+
+
+def test_roundtrip_events_keeps_parent_links(tmp_path):
+    events = reference_trace(30, seed=5, vocab_size=200, p_followup=0.7)
+    p = str(tmp_path / "ref.jsonl")
+    save_trace(p, events)
+    assert load_trace_events(p) == events
+    assert any(e.parent_id is not None for e in events)
+
+
+def test_legacy_headerless_trace_accepted(tmp_path):
+    """Pre-schema files (bare {"t","l_in","l_out"} lines) still load."""
+    p = str(tmp_path / "legacy.jsonl")
+    with open(p, "w") as f:
+        for t, li, lo in [(0.0, 8, 4), (1.5, 12, 6)]:
+            f.write(json.dumps({"t": t, "l_in": li, "l_out": lo}) + "\n")
+    assert load_trace(p) == [(0.0, 8, 4), (1.5, 12, 6)]
+
+
+def test_future_version_rejected(tmp_path):
+    p = str(tmp_path / "v99.jsonl")
+    with open(p, "w") as f:
+        f.write(json.dumps({"schema": TRACE_SCHEMA, "version": 99,
+                            "kind": "lengths"}) + "\n")
+    with pytest.raises(TraceFormatError, match="version"):
+        load_trace_events(p)
+
+
+# ---------------------------------------------------------------------------
+# validation: every malformed line fails with path:line, never a KeyError
+
+
+BAD_LINES = [
+    ("not json at all", "not valid JSON"),
+    ("[1, 2, 3]", "JSON object"),
+    ('{"t": 1.0, "l_in": 8}', "'l_out'"),                  # missing field
+    ('{"t": 1.0, "l_in": 8, "l_out": 0}', "'l_out'"),      # empty output
+    ('{"t": -1.0, "l_in": 8, "l_out": 4}', "'t'"),         # negative time
+    ('{"t": 1.0, "l_in": "8", "l_out": 4}', "'l_in'"),     # wrong type
+    ('{"t": 1.0, "l_in": 8, "l_out": 4, "id": 5, '
+     '"parent_id": 7}', "parent_id 7"),                    # dangling parent
+]
+
+
+@pytest.mark.parametrize("line,match", BAD_LINES)
+def test_malformed_line_raises_clear_error(tmp_path, line, match):
+    p = str(tmp_path / "bad.jsonl")
+    with open(p, "w") as f:
+        f.write(json.dumps({"schema": TRACE_SCHEMA,
+                            "version": TRACE_VERSION,
+                            "kind": "lengths"}) + "\n")
+        f.write(json.dumps({"t": 0.0, "l_in": 8, "l_out": 4}) + "\n")
+        f.write(line + "\n")
+    with pytest.raises(TraceFormatError, match=match) as ei:
+        load_trace_events(p)
+    # the error names the file and the 1-based line it came from
+    assert f"{p}:3" in str(ei.value)
+
+
+def test_bad_tokens_and_duplicate_id_rejected(tmp_path):
+    p = str(tmp_path / "badtok.jsonl")
+    head = json.dumps({"schema": TRACE_SCHEMA, "version": TRACE_VERSION,
+                       "kind": "tokens"})
+    ok = json.dumps({"id": 1, "t": 0.0, "l_out": 4, "tokens": [1, 2, 3]})
+    with open(p, "w") as f:
+        f.write(head + "\n" + ok + "\n")
+        f.write(json.dumps({"id": 2, "t": 0.5, "l_out": 4,
+                            "tokens": []}) + "\n")
+    with pytest.raises(TraceFormatError, match="tokens"):
+        load_trace_events(p)
+    with open(p, "w") as f:
+        f.write(head + "\n" + ok + "\n")
+        f.write(json.dumps({"id": 1, "t": 0.5, "l_out": 4,
+                            "tokens": [4]}) + "\n")
+    with pytest.raises(TraceFormatError, match="duplicate id 1"):
+        load_trace_events(p)
+
+
+def test_out_of_order_timestamps_sorted_with_warning(tmp_path):
+    p = str(tmp_path / "unordered.jsonl")
+    save_trace(p, [(2.0, 8, 4), (0.5, 10, 4), (1.0, 6, 4)])
+    with pytest.warns(UserWarning, match="out of order"):
+        evs = load_trace_events(p)
+    assert [e.t for e in evs] == [0.5, 1.0, 2.0]
+
+
+# ---------------------------------------------------------------------------
+# bundled reference trace (DESIGN §15)
+
+
+def test_reference_trace_structure():
+    events = reference_trace(60, seed=1, vocab_size=400, p_followup=0.7,
+                             max_turns=3)
+    assert len(events) == 60
+    assert [e.id for e in events] == list(range(60))        # file order
+    assert all(events[i].t >= events[i - 1].t for i in range(1, 60))
+    by_id = {e.id: e for e in events}
+    kids = [e for e in events if e.parent_id is not None]
+    assert kids, "multi-turn structure missing"
+    for e in kids:
+        parent = by_id[e.parent_id]
+        assert parent.id < e.id and parent.t <= e.t
+        # the child's prompt extends the parent's full transcript
+        assert e.tokens[:len(parent.tokens)] == parent.tokens
+        assert len(e.tokens) > len(parent.tokens)
+    assert all(0 <= tok < 400 for e in events for tok in e.tokens)
+    assert reference_trace(60, seed=1, vocab_size=400, p_followup=0.7,
+                           max_turns=3) == events           # deterministic
+
+
+def test_trace_prompts_materializes_both_kinds():
+    tok_ev = TraceEvent(t=0.0, l_out=4, l_in=3, tokens=[5, 700, 12], id=0)
+    len_ev = TraceEvent(t=1.0, l_out=6, l_in=9, id=1)
+    out = trace_prompts([tok_ev, len_ev], vocab_size=256, seed=0)
+    assert out[0] == ([5, 700 % 256, 12], 4)     # clamped into the vocab
+    assert len(out[1][0]) == 9 and out[1][1] == 6
+    assert all(0 <= t < 256 for t in out[1][0])
+    assert trace_prompts([len_ev], 256, seed=0)[0][0] \
+        == trace_prompts([len_ev], 256, seed=0)[0][0]
+
+
+# ---------------------------------------------------------------------------
+# goodput accounting through the simulator (DESIGN §15)
+
+
+def test_feed_trace_goodput_sla_disabled():
+    sim = _sim()
+    events = reference_trace(40, seed=2, vocab_size=500)
+    feed_trace(sim, events)
+    res = sim.run()
+    assert res.finished == 40
+    assert res.sla_requests_met == 40
+    assert res.request_sla_attainment == 1.0
+    assert res.goodput_tokens >= res.finished      # >= 1 token per request
+    assert res.goodput_tok_s > 0
+
+
+def test_feed_trace_goodput_unmeetable_sla():
+    serve = ServeConfig(policy="memory", b_max=64, max_new_tokens=64,
+                        ttft_sla_s=1e-9)
+    sim = _sim(serve)
+    feed_trace(sim, reference_trace(20, seed=2, vocab_size=500))
+    res = sim.run()
+    assert res.finished == 20
+    assert res.sla_requests_met == 0
+    assert res.goodput_tokens == 0
+    assert res.request_sla_attainment == 0.0
+    assert res.goodput_tok_s == 0.0
+
+
+def test_feed_trace_double_feed_offsets_rids():
+    sim = _sim()
+    feed_trace(sim, reference_trace(15, seed=3, vocab_size=500))
+    feed_trace(sim, reference_trace(15, seed=4, vocab_size=500))
+    rids = [r.rid for r in sim._all]
+    assert len(rids) == 30 and len(set(rids)) == 30
+    assert sim.run().finished == 30
+
+
+# ---------------------------------------------------------------------------
+# the request-level verdict itself
+
+
+def test_stamp_sla_verdicts():
+    def req(**kw):
+        r = Request(rid=0, arrival_time=0.0, prompt_len=8)
+        for k, v in kw.items():
+            setattr(r, k, v)
+        return r
+
+    # TTFT 1 s; 5 tokens over (3-1)s of decode => mean TBT 500 ms
+    r = req(first_token_time=1.0, finish_time=3.0, _sim_outlen=5)
+    assert r.stamp_sla(0.0, 0.0)                   # both checks disabled
+    assert r.stamp_sla(2.0, 600.0)                 # both met
+    assert not r.stamp_sla(0.5, 600.0) and not r.ttft_ok and r.tbt_ok
+    assert not r.stamp_sla(2.0, 400.0) and r.ttft_ok and not r.tbt_ok
+    # single-token request: no inter-token gap, TBT check passes
+    r1 = req(first_token_time=1.0, finish_time=1.0, _sim_outlen=1)
+    assert r1.stamp_sla(2.0, 1e-9)
+    # rejected / never-served requests can never meet the SLA
+    rj = req(first_token_time=1.0, finish_time=3.0, _sim_outlen=5,
+             rejected=True)
+    assert not rj.stamp_sla(0.0, 0.0) and not rj.sla_met
+    assert not req().stamp_sla(0.0, 0.0)

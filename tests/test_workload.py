@@ -5,6 +5,8 @@ from repro.config.base import ServeConfig
 from repro.config.registry import get_config
 from repro.serving.cost_model import CostModel, PROFILES
 from repro.serving.sim import LengthDist, ServingSimulator
+import math
+
 from repro.serving.workload import (bursty, diurnal, feed, feed_tokens,
                                     load_trace, poisson, save_trace,
                                     shared_prefix)
@@ -37,6 +39,52 @@ def test_diurnal_modulates():
     assert peak > 2 * trough
 
 
+def test_bursty_thinning_matches_rate_law():
+    """Lewis–Shedler thinning: realized per-window rates match lambda(t).
+
+    Discriminating regime: quiet gaps (mean 2 s) dwarf the 1 s burst
+    windows, so the pre-fix sampler (each gap drawn from lambda at the
+    CURRENT arrival instant) stepped clean over most bursts and grossly
+    undershot burst_rate — this pins the thinning fix."""
+    base, burst, period, duty = 0.5, 50.0, 10.0, 0.1
+    arr = bursty(base, burst, period, duty, n=3000, lengths=L, seed=3)
+    nper = int(arr[-1][0] // period)
+    assert nper >= 10
+    b_n = q_n = 0
+    for k in range(nper):
+        t0 = k * period
+        b_n += sum(1 for t, _, _ in arr if t0 <= t < t0 + duty * period)
+        q_n += sum(1 for t, _, _ in arr
+                   if t0 + duty * period <= t < t0 + period)
+    b_rate = b_n / (nper * duty * period)
+    q_rate = q_n / (nper * (1 - duty) * period)
+    assert abs(b_rate - burst) / burst < 0.15, (b_rate, burst)
+    assert abs(q_rate - base) / base < 0.25, (q_rate, base)
+
+
+def test_diurnal_thinning_matches_rate_law():
+    """Per-phase-window realized rates match the sinusoidal lambda(t)
+    within tolerance, peak and trough alike."""
+    mean, amp, period = 10.0, 0.8, 50.0
+    arr = diurnal(mean, amp, period, n=6000, lengths=L, seed=4)
+    nper = int(arr[-1][0] // period)
+    assert nper >= 8
+
+    def lam(t):
+        return max(mean * (1 + amp * math.sin(2 * math.pi * t / period)),
+                   1e-3)
+
+    for p0, p1 in ((0.2, 0.3), (0.7, 0.8)):   # sin peak / trough phases
+        n_obs = sum(1 for t, _, _ in arr
+                    if (t % period) / period >= p0
+                    and (t % period) / period < p1
+                    and t < nper * period)
+        width = (p1 - p0) * period
+        expect = nper * sum(lam((p0 + (i + 0.5) / 200 * (p1 - p0))
+                                * period) for i in range(200)) * width / 200
+        assert abs(n_obs - expect) / expect < 0.2, (p0, n_obs, expect)
+
+
 def test_trace_roundtrip(tmp_path):
     arr = poisson(5.0, 50, L, seed=1)
     p = os.path.join(tmp_path, "trace.jsonl")
@@ -53,6 +101,46 @@ def test_feed_runs_simulator():
     feed(sim, bursty(2.0, 20.0, 30.0, 0.3, 150, L, seed=2))
     res = sim.run()
     assert res.finished == 150
+
+
+def test_feed_double_feed_no_rid_collision():
+    """Regression: feed() used to restart rids at 0 and re-extend `_all`
+    with the WHOLE waiting queue, so a second feed (or feeding a sim that
+    already held requests) produced rid collisions and duplicate `_all`
+    entries, silently corrupting TTFT/goodput aggregation."""
+    cfg = get_config("granite-3-8b")
+    cost = CostModel(cfg, PROFILES["a100x8"])
+    sim = ServingSimulator(
+        cfg, ServeConfig(policy="memory", b_max=256, max_new_tokens=64),
+        cost, L, seed=0)
+    feed(sim, poisson(5.0, 40, L, seed=1))
+    feed(sim, poisson(5.0, 35, L, seed=2))
+    rids = [r.rid for r in sim._all]
+    assert len(rids) == 75 and len(set(rids)) == 75
+    assert len(sim.waiting) == 75
+    res = sim.run()
+    assert res.finished == 75
+    # SLA checks disabled: every finished request meets the goodput SLA
+    assert res.sla_requests_met == 75
+    assert res.request_sla_attainment == 1.0
+
+
+def test_mixed_feeders_share_rid_space():
+    """add_requests + feed + feed_tokens on one sim: rids never collide
+    and `_all` holds each request exactly once."""
+    cfg = get_config("granite-3-8b")
+    cost = CostModel(cfg, PROFILES["a100x8"])
+    sim = ServingSimulator(
+        cfg, ServeConfig(policy="memory", b_max=256, max_new_tokens=32),
+        cost, L, seed=0)
+    sim.add_requests(10, arrival_rate=4.0)
+    sim.add_requests(10, arrival_rate=4.0)
+    feed(sim, poisson(5.0, 10, L, seed=3))
+    feed_tokens(sim, shared_prefix(rate=5.0, n=10, vocab_size=500, seed=4))
+    rids = [r.rid for r in sim._all]
+    assert len(rids) == 40 and len(set(rids)) == 40
+    res = sim.run()
+    assert res.finished == 40
 
 
 # ---------------------------------------------------------------------------
